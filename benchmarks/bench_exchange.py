@@ -1,0 +1,52 @@
+"""Paper Figure 5 + §3.4 headline: all 22 TPC-H queries with the
+device-native ICIExchange vs the host-staged HostExchange (HttpExchange
+analogue), 4 workers.
+
+Reports per-query wall time for both protocols, the total-suite ratio
+(paper: 828s -> 93s, >8x), and the *mechanism* numbers that transfer across
+hardware: bytes staged through host memory (HostExchange) vs zero
+(ICIExchange), and exchange rounds. Also q9-style exchange-heavy vs
+q1-style exchange-light contrast (paper: >20x vs ~1x).
+"""
+
+from __future__ import annotations
+
+from repro.core import HostExchange, ICIExchange, Session
+from repro.tpch import dbgen, queries
+
+from .common import emit, timeit
+
+SF = 0.002
+WORKERS = 4
+
+
+def run(sf: float = SF):
+    catalog = dbgen.load_catalog(sf=sf)
+    totals = {}
+    staged = {}
+    for proto_name, make in (("ici", lambda: ICIExchange()),
+                             ("host", lambda: HostExchange())):
+        total = 0.0
+        staged_bytes = 0
+        for q in sorted(queries.QUERIES):
+            ex = make()
+            session = Session(catalog, num_workers=WORKERS, exchange=ex,
+                              batch_rows=16384)
+            plan = queries.build_query(q, catalog)
+            t = timeit(lambda: session.execute(plan), warmup=1, iters=2)
+            total += t
+            staged_bytes += ex.stats.host_staged_bytes
+            emit(f"fig5_q{q}_{proto_name}", t,
+                 f"rounds={ex.stats.rounds};moved_B={ex.stats.bytes_moved};"
+                 f"staged_B={ex.stats.host_staged_bytes}")
+        totals[proto_name] = total
+        staged[proto_name] = staged_bytes
+    emit("fig5_total_ici", totals["ici"], f"staged_B={staged['ici']}")
+    emit("fig5_total_host", totals["host"],
+         f"staged_B={staged['host']};"
+         f"suite_ratio={totals['host'] / totals['ici']:.2f}x",
+         {"totals": totals, "staged": staged})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Figure 6: Q5 (join-heavy) across scale factors, ICI vs host
+exchange — the protocol ratio must hold as data grows."""
+
+from __future__ import annotations
+
+from repro.core import HostExchange, ICIExchange, Session
+from repro.tpch import dbgen, queries
+
+from .common import emit, timeit
+
+
+def run():
+    for sf in (0.001, 0.002, 0.004):
+        catalog = dbgen.load_catalog(sf=sf)
+        plan = queries.build_query(5, catalog)
+        times = {}
+        for name, ex in (("ici", ICIExchange()), ("host", HostExchange())):
+            session = Session(catalog, num_workers=4, exchange=ex,
+                              batch_rows=16384)
+            times[name] = timeit(lambda: session.execute(plan),
+                                 warmup=1, iters=2)
+            emit(f"fig6_q5_sf{sf}_{name}", times[name],
+                 f"staged_B={ex.stats.host_staged_bytes}")
+        emit(f"fig6_q5_sf{sf}_ratio", times["host"],
+             f"ratio={times['host'] / times['ici']:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

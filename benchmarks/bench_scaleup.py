@@ -1,0 +1,34 @@
+"""Paper Figure 8 (scale-up) + §3.5.1: worker-count sweep at fixed SF.
+
+The paper scales up by adding GPUs with more memory; here we sweep worker
+count on the suite subset and report strong-scaling efficiency (paper: 1->8
+B200s gave 3.2x on SF=1K)."""
+
+from __future__ import annotations
+
+from repro.core import ICIExchange, Session
+from repro.tpch import dbgen, queries
+
+from .common import emit, timeit
+
+QS = (1, 3, 5, 6, 12, 14)
+
+
+def run(sf: float = 0.004):
+    catalog = dbgen.load_catalog(sf=sf)
+    base = None
+    for workers in (1, 2, 4, 8):
+        total = 0.0
+        for q in QS:
+            session = Session(catalog, num_workers=workers,
+                              exchange=ICIExchange(), batch_rows=16384)
+            plan = queries.build_query(q, catalog)
+            total += timeit(lambda: session.execute(plan), warmup=1, iters=2)
+        if base is None:
+            base = total
+        emit(f"fig8_workers{workers}", total,
+             f"speedup={base / total:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Figure 7: weak scaling — data size and worker count grow together
+(SF=100/1gpu .. SF=1000/8gpu in the paper; scaled SFs here). Reports total
+suite time per (sf, workers) plus the per-query join-heavy outliers (the
+paper calls out Q9/Q21)."""
+
+from __future__ import annotations
+
+from repro.core import ICIExchange, Session
+from repro.tpch import dbgen, queries
+
+from .common import emit, timeit
+
+# queries representative of Figure 7b (join-heavy ones deviate most)
+QS = (1, 5, 6, 9, 13, 18, 21)
+
+
+def run():
+    base = 0.001
+    for mult, workers in ((1, 1), (2, 2), (4, 4)):
+        sf = base * mult
+        catalog = dbgen.load_catalog(sf=sf)
+        total = 0.0
+        per_q = {}
+        for q in QS:
+            session = Session(catalog, num_workers=workers,
+                              exchange=ICIExchange(), batch_rows=16384)
+            plan = queries.build_query(q, catalog)
+            t = timeit(lambda: session.execute(plan), warmup=1, iters=2)
+            per_q[q] = t
+            total += t
+        emit(f"fig7_sf{mult}x_w{workers}", total,
+             f"q9={per_q[9] * 1e3:.1f}ms;q21={per_q[21] * 1e3:.1f}ms",
+             {"per_query": {str(k): v for k, v in per_q.items()}})
+
+
+if __name__ == "__main__":
+    run()

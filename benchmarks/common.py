@@ -1,0 +1,28 @@
+"""Shared benchmark plumbing. Prints ``name,us_per_call,derived`` CSV rows
+(harness contract) and writes JSON details to results/bench/."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def emit(name: str, seconds: float, derived: str = "", detail: dict = None):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    if detail is not None:
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+            json.dump({"name": name, "seconds": seconds,
+                       "derived": derived, **detail}, f, indent=1)

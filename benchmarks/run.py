@@ -1,0 +1,42 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows; per-benchmark JSON details land in results/bench/.
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_barebones, bench_cold_hot, bench_cost_perf,
+                   bench_exchange, bench_q5_scaling, bench_scaleup,
+                   bench_storage_format, bench_weak_scaling)
+
+    suites = [
+        ("storage_format(§2.2)", bench_storage_format.run),
+        ("barebones(Table1)", bench_barebones.run),
+        ("exchange(Fig5,§3.4)", bench_exchange.run),
+        ("q5_scaling(Fig6)", bench_q5_scaling.run),
+        ("weak_scaling(Fig7)", bench_weak_scaling.run),
+        ("scaleup(Fig8)", bench_scaleup.run),
+        ("cold_hot(Table3)", bench_cold_hot.run),
+        ("cost_perf(Fig9)", bench_cost_perf.run),
+    ]
+    failures = 0
+    for name, fn in suites:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:   # noqa: BLE001 — keep the harness running
+            failures += 1
+            print(f"# FAILED {name}", flush=True)
+            traceback.print_exc()
+        print(f"# --- {name} done in {time.time() - t0:.0f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the full production stack — device-resident data pipeline, AdamW,
+checkpointing, fault-tolerant loop (one injected failure + recovery).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+On this CPU container the default is a reduced model so the example
+finishes in minutes; pass --full-100m on real hardware.
+"""
+
+import argparse
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data import TokenPipeline
+from repro.models import build_model
+from repro.runtime import FailureInjector, TrainLoop
+from repro.train import make_train_step, train_state_init
+
+
+def make_config(full: bool) -> ArchConfig:
+    if full:   # ~100M params (xlstm-125m-class dense sibling)
+        return ArchConfig(name="demo_100m", family="dense", n_layers=12,
+                          d_model=768, n_heads=12, n_kv=4, d_ff=2048,
+                          vocab=32_000, tie_embeddings=True)
+    return ArchConfig(name="demo_small", family="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv=2, d_ff=512,
+                      vocab=2_048, tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-100m", action="store_true")
+    args = ap.parse_args()
+
+    cfg = make_config(args.full_100m)
+    model = build_model(cfg)
+    print(f"model {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+
+    # synthetic corpus with learnable structure (periodic + noise)
+    rng = np.random.default_rng(0)
+    n = 2_000_000
+    base = np.arange(n) % 97
+    corpus = ((base * 21 + rng.integers(0, 3, n)) % cfg.vocab).astype(np.int32)
+
+    state = train_state_init(model, jax.random.key(0))
+    step = jax.jit(make_train_step(model, base_lr=3e-4,
+                                   total_steps=args.steps))
+
+    def pipeline_factory(start_step):
+        return TokenPipeline(corpus, batch=args.batch, seq_len=args.seq,
+                             start_step=start_step)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        loop = TrainLoop(step, state, pipeline_factory, ckpt_dir,
+                         ckpt_every=50,
+                         injector=FailureInjector(
+                             fail_at_steps=[args.steps // 2]))
+        loop.run(args.steps)
+        losses = [m["loss"] for m in loop.metrics]
+        print(f"restarts survived: {loop.restarts}")
+        print(f"loss: step0={losses[0]:.3f} "
+              f"mid={losses[len(losses) // 2]:.3f} final={losses[-1]:.3f}")
+        assert losses[-1] < losses[0], "training did not reduce loss"
+        print("OK: loss decreased through a mid-run failure + recovery")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .ckpt import CheckpointManager, restore_latest  # noqa: F401

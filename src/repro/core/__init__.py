@@ -1,0 +1,13 @@
+"""Device-resident distributed query engine (the paper's contribution).
+
+Public API:
+
+    from repro.core import dtypes, plan, expr
+    from repro.core.session import Session, Catalog
+    from repro.core.exchange import ICIExchange, HostExchange
+"""
+
+from . import dtypes, expr, plan  # noqa: F401
+from .exchange import HostExchange, ICIExchange  # noqa: F401
+from .session import Catalog, Session  # noqa: F401
+from .table import DeviceTable, concat_tables  # noqa: F401

@@ -1,0 +1,124 @@
+"""Column dtypes for the device-resident query engine.
+
+The paper's cuDF tables are Arrow-columnar in GPU memory. On TPU/XLA every
+array must have a static shape, so the engine works with:
+
+* numeric columns   -- plain jnp arrays (int32, float32, ...)
+* date columns      -- int32 days since 1970-01-01 (Arrow date32)
+* dict strings      -- int32 codes + a host-side dictionary (Arrow dictionary
+                       encoding; the paper dict-encodes strings as data+offset
+                       column pairs, we keep the dictionary in host metadata)
+* fixed-width bytes -- uint8[N, W] matrices for LIKE-style predicates
+
+TPC-H contains no nulls (the paper ignores them as well); validity is a
+table-level row mask, not a per-column bitmap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import datetime
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+_EPOCH = datetime.date(1970, 1, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class DType:
+    """Logical column type."""
+
+    name: str                      # int32 | int64 | float32 | float64 | bool |
+                                   # date32 | dict32 | bytes
+    width: int = 0                 # only for 'bytes': fixed row width
+    dictionary: Optional[Tuple[str, ...]] = None   # only for 'dict32'
+
+    # -- classification helpers -------------------------------------------
+    @property
+    def is_numeric(self) -> bool:
+        return self.name in ("int32", "int64", "float32", "float64")
+
+    @property
+    def is_string(self) -> bool:
+        return self.name in ("dict32", "bytes")
+
+    def np_dtype(self) -> np.dtype:
+        return np.dtype(
+            {
+                "int32": np.int32,
+                "int64": np.int64,
+                "float32": np.float32,
+                "float64": np.float64,
+                "bool": np.bool_,
+                "date32": np.int32,
+                "dict32": np.int32,
+                "bytes": np.uint8,
+            }[self.name]
+        )
+
+    def jnp_dtype(self):
+        return jnp.dtype(self.np_dtype())
+
+    def storage_shape(self, num_rows: int) -> tuple:
+        if self.name == "bytes":
+            return (num_rows, self.width)
+        return (num_rows,)
+
+    def decode(self, code: int) -> str:
+        assert self.name == "dict32" and self.dictionary is not None
+        return self.dictionary[code]
+
+    def encode(self, value: str) -> int:
+        assert self.name == "dict32" and self.dictionary is not None
+        return self.dictionary.index(value)
+
+    def __repr__(self) -> str:  # keep dictionaries out of reprs
+        if self.name == "bytes":
+            return f"bytes[{self.width}]"
+        if self.name == "dict32":
+            n = len(self.dictionary) if self.dictionary else 0
+            return f"dict32[{n}]"
+        return self.name
+
+
+INT32 = DType("int32")
+INT64 = DType("int64")
+FLOAT32 = DType("float32")
+FLOAT64 = DType("float64")
+BOOL = DType("bool")
+DATE32 = DType("date32")
+
+
+def dict32(values) -> DType:
+    return DType("dict32", dictionary=tuple(values))
+
+
+def bytes_(width: int) -> DType:
+    return DType("bytes", width=width)
+
+
+# -- date helpers ----------------------------------------------------------
+
+def date_to_i32(iso: str) -> int:
+    """'1995-03-15' -> days since epoch (int)."""
+    y, m, d = (int(p) for p in iso.split("-"))
+    return (datetime.date(y, m, d) - _EPOCH).days
+
+
+def i32_to_date(days: int) -> str:
+    return (_EPOCH + datetime.timedelta(days=int(days))).isoformat()
+
+
+def encode_bytes(strings, width: int) -> np.ndarray:
+    """Encode python strings into a fixed-width uint8 matrix (space padded)."""
+    out = np.full((len(strings), width), ord(" "), dtype=np.uint8)
+    for i, s in enumerate(strings):
+        b = s.encode("ascii", "replace")[:width]
+        out[i, : len(b)] = np.frombuffer(b, dtype=np.uint8)
+    return out
+
+
+def decode_bytes(row: np.ndarray) -> str:
+    return bytes(np.asarray(row, dtype=np.uint8)).decode("ascii").rstrip()

@@ -1,0 +1,144 @@
+"""Logical query plans.
+
+A plan is a tree of PlanNodes. The Presto coordinator's role (split the plan
+into stages at exchange boundaries, hand fragments to workers) is played by
+``driver.run``; the "driver adaptation" step (substitute device operators,
+insert host/device conversions) is played by the planner in ``planner.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .expr import Expr
+from .operators import AggSpec
+
+
+@dataclasses.dataclass
+class PlanNode:
+    def children(self) -> List["PlanNode"]:
+        return []
+
+
+@dataclasses.dataclass
+class TableScan(PlanNode):
+    """Scan a catalog table. ``columns=None`` reads every column."""
+    table: str
+    columns: Optional[Sequence[str]] = None
+    # pushed-down predicate evaluated inside the scan (data skipping uses
+    # chunk min/max metadata against it when the storage layer has stats)
+    filter: Optional[Expr] = None
+
+
+@dataclasses.dataclass
+class Filter(PlanNode):
+    child: PlanNode
+    predicate: Expr
+    compact: bool = False
+
+    def children(self):
+        return [self.child]
+
+
+@dataclasses.dataclass
+class Project(PlanNode):
+    child: PlanNode
+    projections: Sequence[Tuple[str, Expr]]
+
+    def children(self):
+        return [self.child]
+
+
+@dataclasses.dataclass
+class Aggregation(PlanNode):
+    """mode 'auto' lowers to partial -> exchange -> final when distributed."""
+    child: PlanNode
+    group_keys: Sequence[str]
+    aggs: Sequence[AggSpec]
+    max_groups: int = 4096
+    mode: str = "auto"          # auto | partial | final | single
+
+    def children(self):
+        return [self.child]
+
+
+@dataclasses.dataclass
+class Distinct(PlanNode):
+    child: PlanNode
+    keys: Sequence[str]
+    max_groups: int = 4096
+
+    def children(self):
+        return [self.child]
+
+
+@dataclasses.dataclass
+class Join(PlanNode):
+    """Hash join; ``build`` is materialized, ``probe`` streams.
+
+    distribution:
+      'broadcast'   build side replicated to all workers (small build)
+      'partitioned' both sides exchanged on the join keys (large-large)
+      'local'       sides are already co-partitioned
+    """
+    probe: PlanNode
+    build: PlanNode
+    probe_keys: Sequence[str]
+    build_keys: Sequence[str]
+    build_payload: Sequence[str] = ()
+    join_type: str = "inner"
+    max_matches: int = 1
+    distribution: str = "broadcast"
+
+    def children(self):
+        return [self.probe, self.build]
+
+
+@dataclasses.dataclass
+class OrderBy(PlanNode):
+    child: PlanNode
+    keys: Sequence[str]
+    descending: Optional[Sequence[bool]] = None
+    limit: Optional[int] = None
+
+    def children(self):
+        return [self.child]
+
+
+@dataclasses.dataclass
+class Limit(PlanNode):
+    child: PlanNode
+    n: int
+
+    def children(self):
+        return [self.child]
+
+
+@dataclasses.dataclass
+class ScalarBroadcast(PlanNode):
+    """Attach columns of a 1-row subquery result to every row of child."""
+    child: PlanNode
+    scalar: PlanNode
+    columns: Sequence[str]
+
+    def children(self):
+        return [self.child, self.scalar]
+
+
+@dataclasses.dataclass
+class Exchange(PlanNode):
+    """Explicit repartition on ``keys`` (hash exchange across workers)."""
+    child: PlanNode
+    keys: Sequence[str]
+
+    def children(self):
+        return [self.child]
+
+
+@dataclasses.dataclass
+class InMemorySource(PlanNode):
+    """Source backed by host numpy dict (tests / intermediate results)."""
+    name: str
+    data: Dict[str, Any]
+    schema: Dict[str, Any]

@@ -1,0 +1,278 @@
+"""Pure-JAX relational algorithms on static-shape columnar batches.
+
+These are the TPU adaptations of cuDF's SIMT primitives (DESIGN.md §2):
+dynamic hash tables become sort-based segmenting / open-addressing in fixed
+buffers, dynamic output sizes become static-capacity expansions with planner
+hints. The Pallas kernels in repro.kernels accelerate the hot spots; these
+functions double as their oracles.
+
+All functions operate on raw jnp arrays + a validity mask so they can be
+reused by operators, kernels' ref.py, and the exchange partitioner.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# hashing
+# ---------------------------------------------------------------------------
+
+def hash32(x: jax.Array) -> jax.Array:
+    """Murmur3-style finalizer; output restricted to [0, 2^31-1)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return (x & jnp.uint32(0x7FFFFFFE)).astype(jnp.int32)
+
+
+def hash_combine(cols: Sequence[jax.Array]) -> jax.Array:
+    """Combine >=1 columns into a 31-bit hash key (verify-after-join).
+    2-D columns (fixed-width bytes) hash by folding their byte lanes."""
+    n = cols[0].shape[0]
+    h = jnp.zeros((n,), dtype=jnp.uint32)
+
+    def mix(h, c):
+        hc = hash32(c.astype(jnp.int32)).astype(jnp.uint32)
+        return h ^ (hc + jnp.uint32(0x9E3779B9) + (h << 6) + (h >> 2))
+
+    for c in cols:
+        if c.ndim == 2:       # bytes column: fold 4-byte words then mix
+            folded = jnp.zeros((n,), dtype=jnp.uint32)
+            for j in range(c.shape[1]):
+                folded = folded * jnp.uint32(31) + c[:, j].astype(jnp.uint32)
+            h = mix(h, folded)
+        else:
+            h = mix(h, c)
+    return (h & jnp.uint32(0x7FFFFFFE)).astype(jnp.int32)
+
+
+def join_key(cols: Sequence[jax.Array]) -> Tuple[jax.Array, bool]:
+    """Single int32 join key. Exact for one int column, hashed otherwise.
+
+    Returns (key, exact). When not exact the caller must re-verify equality
+    of the original columns after the join (hash-bucket-then-verify, as a
+    real hash join does).
+    """
+    if len(cols) == 1 and jnp.issubdtype(cols[0].dtype, jnp.integer):
+        return cols[0].astype(jnp.int32), True
+    return hash_combine(cols), False
+
+
+# ---------------------------------------------------------------------------
+# sorting
+# ---------------------------------------------------------------------------
+
+def lexsort(keys: List[jax.Array], validity: jax.Array,
+            descending: Sequence[bool] = None) -> jax.Array:
+    """Stable multi-key sort order; invalid rows sort last.
+
+    ``keys[0]`` is the primary key. 2-D (bytes) keys are reduced to their
+    per-row bytes interpreted big-endian via iterative column passes.
+    """
+    n = validity.shape[0]
+    descending = descending or [False] * len(keys)
+    order = jnp.arange(n, dtype=jnp.int32)
+
+    def _passes(key, desc):
+        # yield 1-D sort passes, least significant first
+        if key.ndim == 2:   # fixed-width bytes: sort byte columns right-to-left
+            cols = [key[:, j].astype(jnp.int32) for j in range(key.shape[1])]
+            cols = list(reversed(cols))
+        else:
+            if jnp.issubdtype(key.dtype, jnp.floating):
+                cols = [key]
+            else:
+                cols = [key.astype(jnp.int32)]
+        if desc:
+            cols = [-c for c in cols]  # note: INT32_MIN is unsupported as a key
+        return cols
+
+    # stable multi-pass sort: apply passes least-significant first, so the
+    # *last* applied pass is the most significant. keys[0] is primary ->
+    # iterate keys in reverse; validity is applied last (most significant:
+    # valid rows (0) before invalid (1)).
+    all_passes = []
+    for key, desc in reversed(list(zip(keys, descending))):
+        all_passes.extend(_passes(key, desc))
+    all_passes.append((~validity).astype(jnp.int32))
+
+    for k in all_passes:  # least-significant first
+        perm = jnp.argsort(jnp.take(k, order), stable=True)
+        order = jnp.take(order, perm)
+    return order
+
+
+# ---------------------------------------------------------------------------
+# group-by
+# ---------------------------------------------------------------------------
+
+class Groups(NamedTuple):
+    order: jax.Array        # row permutation, valid rows first, grouped
+    gids: jax.Array         # group id per *sorted* row; invalid -> max_groups
+    num_groups: jax.Array   # scalar
+    key_rows: jax.Array     # indices (into original rows) of one representative
+                            # row per group, for gathering key columns
+    group_valid: jax.Array  # bool[max_groups]
+
+
+def group_rows(key_cols: List[jax.Array], validity: jax.Array,
+               max_groups: int) -> Groups:
+    """Assign dense group ids via sort + boundary detection.
+
+    This is the sort-based groupby a TPU prefers over cuDF's dynamic hash
+    table: lexsort the keys, mark rows where any key changes, prefix-sum the
+    boundaries. Exact for arbitrarily many key columns (no hashing).
+    """
+    order = lexsort(key_cols, validity)
+    valid_sorted = jnp.take(validity, order)
+    change = jnp.zeros(order.shape, dtype=bool)
+    for k in key_cols:
+        ks = jnp.take(k, order, axis=0)
+        if ks.ndim == 2:
+            diff = jnp.any(ks[1:] != ks[:-1], axis=1)
+        else:
+            diff = ks[1:] != ks[:-1]
+        change = change.at[1:].set(change[1:] | diff)
+    change = change & valid_sorted
+    gids = jnp.cumsum(change.astype(jnp.int32))
+    gids = jnp.where(valid_sorted, gids, max_groups)
+    num_groups = jnp.sum(change.astype(jnp.int32)) + jnp.any(validity).astype(jnp.int32)
+
+    # representative original-row index per group (first row of each segment)
+    first_of_group = valid_sorted & (jnp.concatenate([jnp.ones(1, bool), change[1:]]))
+    reps = jnp.zeros(max_groups + 1, dtype=jnp.int32)
+    reps = reps.at[jnp.where(first_of_group, gids, max_groups)].set(order)
+    group_valid = jnp.arange(max_groups) < num_groups
+    return Groups(order, gids, num_groups, reps[:max_groups], group_valid)
+
+
+def segment_agg(values: jax.Array, gids: jax.Array, order: jax.Array,
+                validity: jax.Array, max_groups: int, kind: str) -> jax.Array:
+    """Aggregate ``values`` per group id. kind in sum|count|min|max."""
+    v = jnp.take(values, order, axis=0)
+    valid_sorted = jnp.take(validity, order)
+    seg = jnp.where(valid_sorted, gids, max_groups)
+    n = max_groups + 1
+    if kind == "count":
+        out = jax.ops.segment_sum(valid_sorted.astype(jnp.int32), seg, n,
+                                  indices_are_sorted=True)
+    elif kind == "sum":
+        acc = jnp.where(valid_sorted, v, jnp.zeros((), dtype=v.dtype))
+        out = jax.ops.segment_sum(acc, seg, n, indices_are_sorted=True)
+    elif kind == "min":
+        big = _extreme(v.dtype, +1)
+        out = jax.ops.segment_min(jnp.where(valid_sorted, v, big), seg, n,
+                                  indices_are_sorted=True)
+    elif kind == "max":
+        small = _extreme(v.dtype, -1)
+        out = jax.ops.segment_max(jnp.where(valid_sorted, v, small), seg, n,
+                                  indices_are_sorted=True)
+    else:
+        raise ValueError(kind)
+    return out[:max_groups]
+
+
+def _extreme(dtype, sign):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(sign * jnp.inf, dtype=dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.array(info.max if sign > 0 else info.min, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# joins (sort + searchsorted; the Pallas kernel gives the hash-table variant)
+# ---------------------------------------------------------------------------
+
+class BuildTable(NamedTuple):
+    sorted_keys: jax.Array   # int32[B], invalid rows pushed to +inf end
+    perm: jax.Array          # int32[B] permutation into original build rows
+    validity: jax.Array      # original build validity
+
+
+def join_build(keys: jax.Array, validity: jax.Array) -> BuildTable:
+    k = jnp.where(validity, keys, INT32_MAX)
+    perm = jnp.argsort(k, stable=True).astype(jnp.int32)
+    return BuildTable(jnp.take(k, perm), perm, validity)
+
+
+class ProbeResult(NamedTuple):
+    build_idx: jax.Array     # int32[P*M] original build row per output row
+    probe_idx: jax.Array     # int32[P*M] probe row per output row
+    valid: jax.Array         # bool[P*M]
+    match_count: jax.Array   # int32[P] matches per probe row (pre-expansion)
+
+
+def join_probe(bt: BuildTable, probe_keys: jax.Array, probe_valid: jax.Array,
+               max_matches: int) -> ProbeResult:
+    """Expansion probe with static output capacity P * max_matches."""
+    p = probe_keys.shape[0]
+    start = jnp.searchsorted(bt.sorted_keys, probe_keys, side="left").astype(jnp.int32)
+    end = jnp.searchsorted(bt.sorted_keys, probe_keys, side="right").astype(jnp.int32)
+    count = jnp.where(probe_valid, end - start, 0)
+    m = max_matches
+    j = jnp.arange(p * m, dtype=jnp.int32)
+    pi = j // m
+    k = j % m
+    within = k < jnp.take(count, pi)
+    b = jnp.clip(jnp.take(start, pi) + k, 0, bt.sorted_keys.shape[0] - 1)
+    bidx = jnp.take(bt.perm, b)
+    valid = within & jnp.take(probe_valid, pi) & jnp.take(bt.validity, bidx)
+    return ProbeResult(bidx, pi, valid, count)
+
+
+def semi_mask(bt: BuildTable, probe_keys: jax.Array,
+              probe_valid: jax.Array) -> jax.Array:
+    """probe rows with >=1 match (EXISTS). Anti = probe_valid & ~semi."""
+    start = jnp.searchsorted(bt.sorted_keys, probe_keys, side="left")
+    end = jnp.searchsorted(bt.sorted_keys, probe_keys, side="right")
+    return probe_valid & (end > start)
+
+
+# ---------------------------------------------------------------------------
+# partitioning (exchange support)
+# ---------------------------------------------------------------------------
+
+def partition_ids(key_cols: Sequence[jax.Array], validity: jax.Array,
+                  num_partitions: int) -> jax.Array:
+    """Hash-partition rows for the exchange; invalid rows -> partition 0."""
+    h = hash_combine(list(key_cols))
+    pid = jnp.remainder(h, num_partitions)
+    return jnp.where(validity, pid, 0).astype(jnp.int32)
+
+
+def partition_layout(pids: jax.Array, validity: jax.Array, num_partitions: int,
+                     part_capacity: int) -> Tuple[jax.Array, jax.Array]:
+    """Stable scatter layout: row -> slot within [num_partitions, capacity].
+
+    Returns (gather_idx, out_valid): ``gather_idx[p*cap + s]`` is the source
+    row for slot s of partition p. Rows past a partition's capacity are
+    dropped (callers size capacity from the flow-control governor; the
+    Pallas radix_partition kernel mirrors this contract).
+    """
+    n = pids.shape[0]
+    pids = jnp.where(validity, pids, num_partitions)  # invalid -> overflow bin
+    order = jnp.argsort(pids, stable=True).astype(jnp.int32)
+    sorted_pids = jnp.take(pids, order)
+    # rank within partition = position - first position of this partition
+    first = jnp.searchsorted(sorted_pids, jnp.arange(num_partitions + 1,
+                                                     dtype=jnp.int32), side="left")
+    rank = jnp.arange(n, dtype=jnp.int32) - jnp.take(first, sorted_pids)
+    in_cap = (rank < part_capacity) & (sorted_pids < num_partitions)
+    total = num_partitions * part_capacity
+    slot = sorted_pids * part_capacity + jnp.clip(rank, 0, part_capacity - 1)
+    slot = jnp.where(in_cap, slot, total)        # rejected rows scatter OOB
+    gather = jnp.zeros((total,), dtype=jnp.int32)
+    gather = gather.at[slot].set(order, mode="drop")
+    out_valid = jnp.zeros((total,), dtype=bool)
+    out_valid = out_valid.at[slot].set(True, mode="drop")
+    return gather, out_valid

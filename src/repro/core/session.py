@@ -1,0 +1,119 @@
+"""Session & catalog: the engine's public entry point.
+
+A Session binds a catalog of tables to an execution configuration (worker
+count, exchange protocol, batch size) and runs logical plans through the
+Driver. Mirrors a Presto cluster: catalog -> connector, session -> query
+submission, ExecutionContext -> worker fleet config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterator, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .driver import Driver, ExecutionContext
+from .exchange import ExchangeProtocol, ICIExchange
+from .plan import PlanNode
+from .table import DeviceTable
+
+
+class TableSource:
+    name: str
+    schema: dict
+
+    def scan(self, num_workers: int, columns, batch_rows: int,
+             filter_expr=None) -> Iterator[DeviceTable]:
+        raise NotImplementedError
+
+    def num_rows(self) -> int:
+        raise NotImplementedError
+
+
+class InMemoryTable(TableSource):
+    """Numpy-backed table; rows are range-partitioned across workers."""
+
+    def __init__(self, name: str, data: Dict[str, np.ndarray], schema: dict):
+        self.name = name
+        self.data = {k: np.asarray(v, dtype=schema[k].np_dtype())
+                     for k, v in data.items()}
+        self.schema = dict(schema)
+        self._n = len(next(iter(self.data.values()))) if self.data else 0
+
+    def num_rows(self) -> int:
+        return self._n
+
+    def scan(self, num_workers: int, columns, batch_rows: int,
+             filter_expr=None) -> Iterator[DeviceTable]:
+        cols = list(columns) if columns else list(self.data.keys())
+        w = num_workers
+        per_worker = math.ceil(self._n / w) if self._n else 1
+        n_batches = max(1, math.ceil(per_worker / batch_rows))
+        for b in range(n_batches):
+            lo = b * batch_rows
+            hi = min(lo + batch_rows, per_worker)
+            cap = hi - lo
+            stacked_cols, stacked_valid = {}, np.zeros((w, cap), dtype=bool)
+            for name in cols:
+                dt_ = self.schema[name]
+                arr = self.data[name]
+                shape = (w, cap) + dt_.storage_shape(1)[1:] if dt_.name == "bytes" \
+                    else (w, cap)
+                if dt_.name == "bytes":
+                    shape = (w, cap, dt_.width)
+                buf = np.zeros(shape, dtype=dt_.np_dtype())
+                for wk in range(w):
+                    base = wk * per_worker
+                    s, e = base + lo, min(base + hi, self._n)
+                    if e > s:
+                        buf[wk, : e - s] = arr[s:e]
+                        stacked_valid[wk, : e - s] = True
+                stacked_cols[name] = jnp.asarray(buf)
+            yield DeviceTable(stacked_cols,
+                              jnp.asarray(stacked_valid),
+                              {c: self.schema[c] for c in cols})
+
+
+class Catalog:
+    def __init__(self):
+        self._tables: Dict[str, TableSource] = {}
+
+    def register(self, source: TableSource):
+        self._tables[source.name] = source
+
+    def register_numpy(self, name: str, data: Dict[str, np.ndarray], schema):
+        self.register(InMemoryTable(name, data, schema))
+
+    def get(self, name: str) -> TableSource:
+        return self._tables[name]
+
+    def tables(self):
+        return list(self._tables)
+
+
+@dataclasses.dataclass
+class Session:
+    catalog: Catalog
+    num_workers: int = 1
+    exchange: Optional[ExchangeProtocol] = None
+    batch_rows: int = 8192
+    host_only_ops: frozenset = frozenset()
+    mesh: Optional[object] = None          # Mesh with a 'workers' axis
+
+    def context(self) -> ExecutionContext:
+        return ExecutionContext(
+            catalog=self.catalog,
+            num_workers=self.num_workers,
+            exchange=self.exchange or ICIExchange(mesh=self.mesh),
+            batch_rows=self.batch_rows,
+            host_only_ops=self.host_only_ops,
+            mesh=self.mesh,
+        )
+
+    def execute(self, plan: PlanNode) -> Dict[str, np.ndarray]:
+        driver = Driver(self.context())
+        self.last_driver = driver
+        return driver.collect(plan)

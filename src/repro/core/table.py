@@ -1,0 +1,173 @@
+"""DeviceTable: the engine's CudfVector analogue.
+
+A DeviceTable is a *batch* of rows resident in device memory:
+
+* ``columns``   -- name -> jnp array, every array has the same leading
+                   dimension ``capacity`` (static).
+* ``validity``  -- bool[capacity]; rows with validity False are dead
+                   (filtered out / padding). TPU has no dynamic shapes, so a
+                   filter marks rows dead instead of shrinking the array;
+                   ``compact()`` is the explicit stream-compaction step.
+* ``schema``    -- name -> DType (host metadata, like the CPU-resident schema
+                   part of the paper's two-part CudfVector transfer).
+
+Like the paper's CudfVector (cudf table + CUDA stream), the device data and
+host metadata travel together; XLA's async dispatch plays the role of the
+CUDA stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dtypes import DType
+
+Schema = Dict[str, DType]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceTable:
+    columns: Dict[str, jax.Array]
+    validity: jax.Array                  # bool[capacity]
+    schema: Schema                       # aux data (host side)
+
+    # -- pytree plumbing (schema is static) --------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns.keys()))
+        children = tuple(self.columns[n] for n in names) + (self.validity,)
+        aux = (names, tuple((n, self.schema[n]) for n in sorted(self.schema)))
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        names, schema_items = aux
+        cols = dict(zip(names, children[:-1]))
+        return cls(cols, children[-1], dict(schema_items))
+
+    # -- basic properties ---------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.validity.shape[0])
+
+    @property
+    def column_names(self) -> List[str]:
+        return list(self.columns.keys())
+
+    def num_valid(self) -> jax.Array:
+        return jnp.sum(self.validity.astype(jnp.int32))
+
+    def nbytes(self) -> int:
+        total = self.validity.size * self.validity.dtype.itemsize
+        for arr in self.columns.values():
+            total += arr.size * arr.dtype.itemsize
+        return int(total)
+
+    # -- constructors ---------------------------------------------------------
+    @staticmethod
+    def from_numpy(data: Dict[str, np.ndarray], schema: Schema,
+                   capacity: Optional[int] = None) -> "DeviceTable":
+        n = len(next(iter(data.values()))) if data else 0
+        cap = capacity or max(n, 1)
+        assert cap >= n, f"capacity {cap} < rows {n}"
+        cols = {}
+        for name, arr in data.items():
+            dt = schema[name]
+            arr = np.asarray(arr, dtype=dt.np_dtype())
+            full_shape = dt.storage_shape(cap)
+            out = np.zeros(full_shape, dtype=dt.np_dtype())
+            out[:n] = arr
+            cols[name] = jnp.asarray(out)
+        validity = np.zeros(cap, dtype=bool)
+        validity[:n] = True
+        return DeviceTable(cols, jnp.asarray(validity), dict(schema))
+
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        """Pull valid rows back to host (the CudfToVelox conversion)."""
+        validity = np.asarray(self.validity)
+        return {
+            name: np.asarray(arr)[validity] for name, arr in self.columns.items()
+        }
+
+    # -- row ops ---------------------------------------------------------------
+    def select(self, names) -> "DeviceTable":
+        return DeviceTable(
+            {n: self.columns[n] for n in names},
+            self.validity,
+            {n: self.schema[n] for n in names},
+        )
+
+    def rename(self, mapping: Dict[str, str]) -> "DeviceTable":
+        cols = {mapping.get(n, n): a for n, a in self.columns.items()}
+        schema = {mapping.get(n, n): d for n, d in self.schema.items()}
+        return DeviceTable(cols, self.validity, schema)
+
+    def with_column(self, name: str, arr: jax.Array, dtype: DType) -> "DeviceTable":
+        cols = dict(self.columns)
+        cols[name] = arr
+        schema = dict(self.schema)
+        schema[name] = dtype
+        return DeviceTable(cols, self.validity, schema)
+
+    def filter(self, mask: jax.Array) -> "DeviceTable":
+        return DeviceTable(self.columns, self.validity & mask, self.schema)
+
+    def gather(self, idx: jax.Array, valid: jax.Array) -> "DeviceTable":
+        """Take rows at ``idx`` (new capacity = len(idx)); ``valid`` marks live
+        output rows. Gathered validity is ANDed with the source row's."""
+        cols = {n: jnp.take(a, idx, axis=0) for n, a in self.columns.items()}
+        v = jnp.take(self.validity, idx, axis=0) & valid
+        return DeviceTable(cols, v, self.schema)
+
+    def compact(self) -> "DeviceTable":
+        """Stream compaction: move valid rows to the front (stable).
+
+        cuDF's apply_boolean_mask shrinks the table; with static shapes we
+        keep capacity and push dead rows to the tail so downstream kernels
+        touch a dense prefix.
+        """
+        order = jnp.argsort(~self.validity, stable=True)
+        cols = {n: jnp.take(a, order, axis=0) for n, a in self.columns.items()}
+        return DeviceTable(cols, jnp.take(self.validity, order), self.schema)
+
+    def pad_to(self, capacity: int) -> "DeviceTable":
+        if capacity == self.capacity:
+            return self
+        assert capacity > self.capacity
+        pad = capacity - self.capacity
+        cols = {
+            n: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+            for n, a in self.columns.items()
+        }
+        return DeviceTable(cols, jnp.pad(self.validity, (0, pad)), self.schema)
+
+
+def concat_tables(tables: List[DeviceTable]) -> DeviceTable:
+    """Concatenate batches along the row axis (the paper's vector-compaction
+    primitive). For worker-stacked tables ([W, cap, ...]) the row axis is 1;
+    the worker axis is never concatenated."""
+    assert tables, "concat of zero tables"
+    if len(tables) == 1:
+        return tables[0]
+    schema = tables[0].schema
+    names = tables[0].column_names
+    axis = tables[0].validity.ndim - 1
+    cols = {
+        n: jnp.concatenate([t.columns[n] for t in tables], axis=axis)
+        for n in names
+    }
+    validity = jnp.concatenate([t.validity for t in tables], axis=axis)
+    return DeviceTable(cols, validity, dict(schema))
+
+
+def empty_like_schema(schema: Schema, capacity: int) -> DeviceTable:
+    cols = {
+        n: jnp.zeros(dt.storage_shape(capacity), dtype=dt.jnp_dtype())
+        for n, dt in schema.items()
+    }
+    return DeviceTable(cols, jnp.zeros(capacity, dtype=bool), dict(schema))

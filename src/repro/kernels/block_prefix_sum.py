@@ -1,0 +1,57 @@
+"""Stream-compaction address computation (blocked prefix sum) in Pallas.
+
+cuDF's apply_boolean_mask uses a decoupled-lookback scan on GPU; the TPU
+adaptation computes within-block exclusive positions with a triangular
+matmul (the MXU does the prefix sum) and carries the running block total
+through the sequential grid (TPU grids execute in order, so a scalar carry
+in the output ref is race-free) — a two-level scan with no atomics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 1024
+
+
+def _kernel(mask_ref, pos_ref, total_ref, *, row_block: int):
+    m = mask_ref[...].astype(jnp.float32)           # [R]
+    rows = m.shape[0]
+    # strictly-lower-triangular ones: exclusive prefix via MXU
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (rows, rows), 0)
+           > jax.lax.broadcasted_iota(jnp.int32, (rows, rows), 1)) \
+        .astype(jnp.float32)
+    excl = (tri @ m[:, None])[:, 0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        total_ref[...] = jnp.zeros_like(total_ref)
+
+    base = total_ref[0]
+    pos_ref[...] = (excl + base.astype(jnp.float32)).astype(jnp.int32)
+    total_ref[...] = (base + jnp.sum(m).astype(jnp.int32))[None]
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
+def block_prefix_sum(mask, row_block: int = ROW_BLOCK,
+                     interpret: bool = False):
+    """mask [N] -> (exclusive positions [N] int32, total int32)."""
+    n = mask.shape[0]
+    row_block = min(row_block, n)
+    pad = (-n) % row_block
+    m = jnp.pad(mask.astype(jnp.int32), (0, pad))
+    pos, total = pl.pallas_call(
+        functools.partial(_kernel, row_block=row_block),
+        grid=(m.shape[0] // row_block,),
+        in_specs=[pl.BlockSpec((row_block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((row_block,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((m.shape[0],), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        interpret=interpret,
+    )(m)
+    return pos[:n], total[0]

@@ -1,0 +1,100 @@
+"""Blocked causal flash attention (forward) in Pallas.
+
+Online-softmax over K/V blocks with the running (m, l, acc) statistics in
+VMEM scratch; Q is tiled (BLOCK_Q x D) and each grid step streams K/V tiles
+(BLOCK_K x D) from HBM through VMEM. Tile sizes are multiples of the TPU
+lane layout (x128) and the MXU dimension; D (head dim) is kept whole per
+tile — 64..256 on the assigned archs, within VMEM budget:
+
+    VMEM per step ~ BLOCK_Q*D (q) + 2*BLOCK_K*D (k,v) + BLOCK_Q*BLOCK_K (s)
+    = 128*128*4B * 4 tiles ~ 256 KiB  << 16 MiB v5e VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_len: int,
+            causal: bool, scale: float):
+    q = q_ref[...].astype(jnp.float32) * scale            # [BQ, D]
+    block_q = q.shape[0]
+    q_base = pl.program_id(1) * block_q
+
+    m = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q, 1), jnp.float32)
+    acc = jnp.zeros((block_q, q.shape[1]), jnp.float32)
+
+    num_k = seq_len // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T                                        # [BQ, BK] on MXU
+        if causal:
+            rows = q_base + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_q, block_k), 0)
+            cols = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * alpha + p @ v
+        return m_new, l, acc
+
+    if causal:
+        # only K blocks at or before this Q block contribute
+        last = pl.program_id(1) * block_q // block_k + \
+            (block_q + block_k - 1) // block_k
+        last = jnp.minimum(last, num_k)
+    else:
+        last = num_k
+    m, l, acc = jax.lax.fori_loop(0, last, body, (m, l, acc))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention(q, k, v, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False):
+    """q,k,v: [B, H, S, D] -> [B, H, S, D]. S must divide by the blocks."""
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    scale = 1.0 / math.sqrt(d)
+    bh = b * h
+
+    def reshaped(x):
+        return x.reshape(bh, s, d)
+
+    grid = (bh, s // block_q)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, seq_len=s, causal=causal,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(reshaped(q), reshaped(k), reshaped(v))
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,47 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the compiled kernels run natively; elsewhere (this CPU
+container) they run in interpret mode, which executes the kernel body in
+Python and is what the correctness tests sweep. ``use_pallas()`` is the
+engine's dispatch switch.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref  # noqa: F401  (oracles re-exported for convenience)
+from .block_prefix_sum import block_prefix_sum as _bps
+from .flash_attention import flash_attention as _flash
+from .hash_probe import build_table, hash_probe as _probe  # noqa: F401
+from .radix_histogram import radix_histogram as _hist
+from .segmented_agg import segmented_sum as _segsum
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not on_tpu()
+
+
+def flash_attention(q, k, v, causal=True, **kw):
+    return _flash(q, k, v, causal=causal, interpret=_interp(), **kw)
+
+
+def segmented_sum(gids, values, num_groups, **kw):
+    return _segsum(gids, values, num_groups, interpret=_interp(), **kw)
+
+
+def radix_histogram(pids, num_partitions, **kw):
+    return _hist(pids, num_partitions, interpret=_interp(), **kw)
+
+
+def hash_probe(table_keys, table_vals, probe_keys, **kw):
+    return _probe(table_keys, table_vals, probe_keys, interpret=_interp(),
+                  **kw)
+
+
+def block_prefix_sum(mask, **kw):
+    return _bps(mask, interpret=_interp(), **kw)

@@ -1,0 +1,52 @@
+"""Radix histogram (exchange metadata phase) in Pallas.
+
+Counts rows per destination partition — the receive-buffer sizing handshake
+of the ICI exchange (paper's "metadata first" rendezvous). Same MXU
+scatter-add idiom as segmented_agg: one_hot(pids)ᵀ @ 1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 2048
+
+
+def _kernel(pid_ref, out_ref, *, num_partitions: int):
+    rows = pid_ref.shape[0]
+    pids = pid_ref[...]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (rows, num_partitions), 1)
+              == pids[:, None]).astype(jnp.float32)
+    ones = jnp.ones((rows, 1), jnp.float32)
+    counts = onehot.T @ ones                      # [P, 1] on the MXU
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += counts[:, 0].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_partitions", "row_block",
+                                             "interpret"))
+def radix_histogram(pids, num_partitions: int, row_block: int = ROW_BLOCK,
+                    interpret: bool = False):
+    """pids [N] int32 in [0, P) (others ignored) -> counts [P] int32."""
+    n = pids.shape[0]
+    row_block = min(row_block, n)
+    pad = (-n) % row_block
+    if pad:
+        pids = jnp.pad(pids, (0, pad), constant_values=num_partitions)
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_partitions=num_partitions),
+        grid=(pids.shape[0] // row_block,),
+        in_specs=[pl.BlockSpec((row_block,), lambda r: (r,))],
+        out_specs=pl.BlockSpec((num_partitions,), lambda r: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_partitions,), jnp.int32),
+        interpret=interpret,
+    )(pids)
+    return out

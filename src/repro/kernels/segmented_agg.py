@@ -1,0 +1,66 @@
+"""Segmented aggregation via one-hot MXU scatter-add (Pallas).
+
+cuDF's hash-aggregation scatter is warp-atomic on GPU; the TPU has no
+atomics, so the adaptation (DESIGN.md §2) turns scatter-add into a matmul:
+for each row block, one_hot(gids)ᵀ @ values accumulates onto the group
+vector using the MXU — the systolic array does the reduction. The grid is
+sequential on TPU, so output-block accumulation across row blocks is safe.
+
+Group counts beyond the block width accumulate in slabs of GROUP_BLOCK.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 1024
+GROUP_BLOCK = 1024
+
+
+def _kernel(gid_ref, val_ref, out_ref, *, group_block: int):
+    rows = gid_ref.shape[0]
+    gids = gid_ref[...]
+    vals = val_ref[...].astype(jnp.float32)
+    local = gids - pl.program_id(0) * group_block  # [R], this group slab
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (rows, group_block), 1)
+              == local[:, None]).astype(jnp.float32)
+    contrib = onehot.T @ vals[:, None]             # [G_blk, 1] via MXU
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += contrib[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "row_block",
+                                             "interpret"))
+def segmented_sum(gids, values, num_groups: int, row_block: int = ROW_BLOCK,
+                  interpret: bool = False):
+    """gids [N] int32 (>= num_groups dropped), values [N] -> [num_groups]."""
+    n = gids.shape[0]
+    row_block = min(row_block, n)
+    pad = (-n) % row_block
+    if pad:
+        gids = jnp.pad(gids, (0, pad), constant_values=num_groups)
+        values = jnp.pad(values, (0, pad))
+    n_pad = gids.shape[0]
+    g_pad = ((num_groups + GROUP_BLOCK - 1) // GROUP_BLOCK) * GROUP_BLOCK
+
+    grid = (g_pad // GROUP_BLOCK, n_pad // row_block)
+    out = pl.pallas_call(
+        functools.partial(_kernel, group_block=GROUP_BLOCK),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block,), lambda g, r: (r,)),
+            pl.BlockSpec((row_block,), lambda g, r: (r,)),
+        ],
+        out_specs=pl.BlockSpec((GROUP_BLOCK,), lambda g, r: (g,)),
+        out_shape=jax.ShapeDtypeStruct((g_pad,), jnp.float32),
+        interpret=interpret,
+    )(gids, values.astype(jnp.float32))
+    return out[:num_groups]

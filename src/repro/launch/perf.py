@@ -1,0 +1,103 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: lowers the three selected cells under each
+variant and records the roofline terms to results/perf/<cell>__<variant>.json.
+
+Cells (selection rationale in EXPERIMENTS.md §Perf):
+  A. xlstm_125m  train_4k   — worst roofline fraction (memory-bound by the
+     recurrent state round trip).  variants: recurrent | chunkwise
+  B. granite_34b train_4k   — most collective-bound (FSDP weight gathers).
+     variants: zero3 | zero1
+  C. dbrx_132b   train_4k   — most representative of the paper's exchange
+     (MoE EP dispatch). variants: gspmd_cap1.25 | gspmd_cap1.0 | explicit_a2a
+"""
+
+import argparse
+import json
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "perf")
+
+
+def run_variant(cell: str, variant: str):
+    # configure globals BEFORE lowering
+    from ..models import moe, xlstm
+    from . import dryrun
+
+    from ..models import transformer
+
+    arch, shape = cell.split("/")
+    zero_stage = 3
+    transformer.REMAT_BLOCKS = False        # baseline: no remat
+    if variant == "recurrent":
+        xlstm.MLSTM_MODE = "recurrent"
+    elif variant == "chunkwise":
+        xlstm.MLSTM_MODE = "chunkwise"
+    elif variant == "zero3":
+        zero_stage = 3
+    elif variant == "zero1":
+        zero_stage = 1
+    elif variant == "zero3_remat":
+        zero_stage = 3
+        transformer.REMAT_BLOCKS = True
+    elif variant.startswith("gspmd_cap"):
+        moe.MOE_DISPATCH = "gspmd"
+        moe.CAPACITY_FACTOR = float(variant.replace("gspmd_cap", ""))
+    elif variant == "explicit_a2a":
+        moe.MOE_DISPATCH = "a2a"
+        moe.CAPACITY_FACTOR = 1.0
+    else:
+        raise ValueError(variant)
+
+    rec = dryrun.lower_cell(arch, shape, multi_pod=False,
+                            zero_stage=zero_stage)
+    rec["variant"] = variant
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{variant}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    t = rec["roofline"]
+    print(f"[{arch} {shape} {variant}] dom={rec['dominant'][:-2]} "
+          f"compute={t['compute_s']:.4g}s memory={t['memory_s']:.4g}s "
+          f"collective={t['collective_s']:.4g}s "
+          f"flops={rec['hlo_flops']:.3g} collB={rec['collective_bytes_total']:.3g}",
+          flush=True)
+    # restore production defaults
+    xlstm.MLSTM_MODE = "chunkwise"
+    moe.MOE_DISPATCH = "a2a"
+    moe.CAPACITY_FACTOR = 1.25
+    transformer.REMAT_BLOCKS = True
+    return rec
+
+
+CELLS = {
+    "A": ("xlstm_125m/train_4k", ["recurrent", "chunkwise"]),
+    "B": ("granite_34b/train_4k", ["zero3", "zero1", "zero3_remat"]),
+    "C": ("dbrx_132b/train_4k",
+          ["gspmd_cap1.25", "gspmd_cap1.0", "explicit_a2a"]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=[None, "A", "B", "C"])
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+    for key, (cell, variants) in CELLS.items():
+        if args.cell and key != args.cell:
+            continue
+        for v in variants:
+            if args.variant and v != args.variant:
+                continue
+            path = os.path.join(RESULTS_DIR,
+                                f"{cell.replace('/', '__')}__{v}.json")
+            if os.path.exists(path):
+                print(f"[cached] {cell} {v}")
+                continue
+            run_variant(cell, v)
+
+
+if __name__ == "__main__":
+    main()

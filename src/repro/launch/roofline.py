@@ -1,0 +1,92 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs      / (chips * 197e12)      TPU v5e bf16 peak
+    memory     = HLO_bytes      / (chips * 819e9)       HBM bandwidth
+    collective = collective_B   / (chips * 50e9)        ICI per-link
+
+cost_analysis() provides FLOPs/bytes; collective bytes are parsed from the
+post-SPMD HLO text (result-shape bytes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops). The post-SPMD module
+is the per-device program, so parsed quantities are already per-chip and
+``roofline_terms`` is called with chips=1; MODEL_FLOPS comparisons divide
+the analytic global count by the chip count.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result type of a collective op, e.g.:  %x = bf16[8,128]{1,0} all-gather(
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind over the whole program."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        if line.lstrip().startswith("%") or " = " in line:
+            lhs = line.split("=", 1)[0]
+            rhs = line.split("=", 1)[1]
+            # result may be a tuple (async pairs); sum every shape before
+            # the op name
+            head = rhs.split(kind)[0]
+            total = sum(_shape_bytes(dt, dims)
+                        for dt, dims in _TUPLE_RE.findall(head))
+            out[kind] += total
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: int, chips: int) -> Dict[str, float]:
+    return {
+        "compute_s": flops / (chips * PEAK_FLOPS),
+        "memory_s": bytes_accessed / (chips * HBM_BW),
+        "collective_s": coll_bytes / (chips * ICI_BW),
+    }
+
+
+def dominant(terms: Dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train (fwd+bwd), 2*N*D prefill,
+    2*N_active*B decode (one token per sequence)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,3 @@
+"""Model zoo for the assigned architecture pool."""
+
+from .model import LMModel, build_model  # noqa: F401

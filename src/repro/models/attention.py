@@ -1,0 +1,117 @@
+"""GQA attention: train/prefill (full causal) and decode (KV cache).
+
+TPU notes: head_dim is 128 on most assigned archs (MXU-lane aligned); GQA is
+computed by reshaping Q to [B, S, K, H/K, dh] so the KV tensors are never
+materialized repeated. The KV cache keeps its sequence axis shardable (see
+sharding.shard_act('kv_cache')): decode attention over a sharded cache
+reduces with a global max/sum, the flash-style distributed softmax.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, _init, apply_rope
+from .sharding import shard_act
+
+
+def init_attention(key, cfg):
+    d, h, k, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    keys = jax.random.split(key, 4)
+    p = {"wq": _init(keys[0], (d, h * dh), d),
+         "wk": _init(keys[1], (d, k * dh), d),
+         "wv": _init(keys[2], (d, k * dh), d),
+         "wo": _init(keys[3], (h * dh, d), h * dh)}
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h * dh,), DTYPE)
+        p["b_k"] = jnp.zeros((k * dh,), DTYPE)
+        p["b_v"] = jnp.zeros((k * dh,), DTYPE)
+    return p
+
+
+def _qkv(params, x, cfg, positions, rope: bool = True):
+    b, s, _ = x.shape
+    h, k, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = x @ params["wq"]
+    kk = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, kk, v = q + params["b_q"], kk + params["b_k"], v + params["b_v"]
+    q = q.reshape(b, s, h, dh)
+    kk = kk.reshape(b, s, k, dh)
+    v = v.reshape(b, s, k, dh)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kk = apply_rope(kk, positions, cfg.rope_theta)
+    return shard_act(q, "heads"), kk, v
+
+
+def _gqa_scores(q, k, cfg):
+    """q [B,S,H,dh], k [B,T,K,dh] -> scores [B,K,H/K,S,T] without repeat."""
+    b, s, h, dh = q.shape
+    g = h // cfg.n_kv
+    qg = q.reshape(b, s, cfg.n_kv, g, dh)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k) * (dh ** -0.5)
+
+
+def full_attention(params, x, cfg, positions, causal: bool = True):
+    """Train/prefill path."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, cfg, positions)
+    scores = _gqa_scores(q, k, cfg).astype(jnp.float32)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    ctx = shard_act(ctx.reshape(b, s, cfg.n_heads, cfg.head_dim), "heads")
+    return ctx.reshape(b, s, -1) @ params["wo"]
+
+
+def cross_attention(params, x, memory, cfg):
+    """Decoder-side attention over encoder output (no causal mask/rope)."""
+    b, s, _ = x.shape
+    t = memory.shape[1]
+    h, kn, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (memory @ params["wk"]).reshape(b, t, kn, dh)
+    v = (memory @ params["wv"]).reshape(b, t, kn, dh)
+    scores = _gqa_scores(q, k, cfg).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return ctx.reshape(b, s, -1) @ params["wo"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # [B, S_max, K, dh]
+    v: jax.Array
+
+
+def init_kv_cache(cfg, batch: int, max_len: int) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv, cfg.head_dim)
+    return KVCache(shard_act(jnp.zeros(shape, DTYPE), "kv_cache"),
+                   shard_act(jnp.zeros(shape, DTYPE), "kv_cache"))
+
+
+def decode_attention(params, x, cfg, cache: KVCache, pos):
+    """One-token decode: update cache at ``pos``, attend over the prefix.
+
+    x: [B, 1, D]; pos: scalar int32. Static shapes: attention runs over the
+    whole cache with an index mask (memory-bound, the decode roofline)."""
+    b = x.shape[0]
+    q, k_new, v_new = _qkv(params, x, cfg,
+                           jnp.full((b, 1), pos, dtype=jnp.int32))
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, pos, 0, 0))
+    k, v = shard_act(k, "kv_cache"), shard_act(v, "kv_cache")
+    scores = _gqa_scores(q, k, cfg).astype(jnp.float32)   # [B,K,G,1,S]
+    smax = k.shape[1]
+    live = (jnp.arange(smax) <= pos)[None, None, None, None, :]
+    scores = jnp.where(live, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    out = ctx.reshape(b, 1, -1) @ params["wo"]
+    return out, KVCache(k, v)

@@ -1,0 +1,77 @@
+"""Shared layers: norms, SwiGLU MLP, embeddings, RoPE."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sharding import shard_act
+
+DTYPE = jnp.bfloat16
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_rms(key, d):
+    del key
+    return jnp.ones((d,), dtype=jnp.float32)
+
+
+def _init(key, shape, fan_in):
+    return (jax.random.normal(key, shape, dtype=jnp.float32)
+            * (fan_in ** -0.5)).astype(DTYPE)
+
+
+def init_mlp(key, d, f, gelu: bool = False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w1": _init(k1, (d, f), d), "w2": _init(k3, (f, d), f)}
+    if not gelu:
+        p["w3"] = _init(k2, (d, f), d)
+    return p
+
+
+def mlp(params, x):
+    if "w3" in params:       # SwiGLU
+        h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    else:                    # 2-matrix GeLU (gpt-bigcode style)
+        h = jax.nn.gelu(x @ params["w1"])
+    h = shard_act(h, "ffn")
+    return h @ params["w2"]
+
+
+def init_embed(key, vocab, d):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02) \
+        .astype(DTYPE)
+
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, d_head, 2) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, dh]; positions: [B, S] int32."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [B,S,dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token NLL in fp32. logits [B,S,V] (possibly vocab-sharded)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)

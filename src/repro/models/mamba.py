@@ -1,0 +1,142 @@
+"""Mamba-1 selective SSM block (jamba's token mixer).
+
+TPU adaptation (DESIGN.md §2): the CUDA kernel's SRAM-resident selective
+scan becomes a nested scan — outer lax.scan over chunks carries the
+[B, DI, N] state (only chunk-boundary states live in HBM), the rematerialized
+inner scan recomputes within-chunk states in the backward pass. This bounds
+activation memory at seq_len/chunk boundary states instead of seq_len.
+
+Decode is the O(1) recurrent step on (conv window, ssm state).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, _init
+from .sharding import shard_act
+
+CHUNK = 64
+
+
+def d_inner(cfg) -> int:
+    return cfg.mamba_expand * cfg.d_model
+
+
+def dt_rank(cfg) -> int:
+    return math.ceil(cfg.d_model / 16)
+
+
+def init_mamba(key, cfg):
+    d, di, n, r = cfg.d_model, d_inner(cfg), cfg.mamba_d_state, dt_rank(cfg)
+    keys = jax.random.split(key, 6)
+    return {
+        "in_proj": _init(keys[0], (d, 2 * di), d),
+        "conv_w": _init(keys[1], (cfg.mamba_d_conv, di), cfg.mamba_d_conv),
+        "conv_b": jnp.zeros((di,), DTYPE),
+        "x_proj": _init(keys[2], (di, r + 2 * n), di),
+        "dt_proj": _init(keys[3], (r, di), r),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))).copy(),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(keys[4], (di, d), di),
+    }
+
+
+def _ssm_params(params, xc, cfg):
+    """xc [..., DI] -> (dt [...,DI], B [...,N], C [...,N]) selective params."""
+    n, r = cfg.mamba_d_state, dt_rank(cfg)
+    proj = xc @ params["x_proj"]
+    dt = jax.nn.softplus(
+        (proj[..., :r] @ params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])
+    b = proj[..., r: r + n].astype(jnp.float32)
+    c = proj[..., r + n:].astype(jnp.float32)
+    return dt, b, c
+
+
+def _conv(params, x, cfg):
+    """Causal depthwise conv over seq. x [B, S, DI]."""
+    kw = cfg.mamba_d_conv
+    pad = jnp.pad(x, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(kw):   # small static unroll (kw = 4)
+        out = out + pad[:, i: i + x.shape[1], :] * params["conv_w"][i]
+    return out + params["conv_b"]
+
+
+def mamba_forward(params, x, cfg):
+    """Train/prefill: nested chunk scan. x [B, S, D] -> [B, S, D]."""
+    bsz, s, _ = x.shape
+    di, n = d_inner(cfg), cfg.mamba_d_state
+    xz = x @ params["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_conv(params, xr, cfg))
+
+    dt, bmat, cmat = _ssm_params(params, xc, cfg)
+    a = -jnp.exp(params["a_log"])                      # [DI, N]
+    # discretize: da [B,S,DI,N], db·x [B,S,DI,N]
+    chunks = max(s // CHUNK, 1)
+    csize = s // chunks
+    xc_f32 = xc.astype(jnp.float32)
+
+    def chunk_body(h0, args):
+        xck, dtk, bk, ck = args                        # [csize, ...] per batch
+
+        def step(h, t):
+            xt, dtt, bt, ct = t
+            da = jnp.exp(dtt[:, :, None] * a)          # [B, DI, N]
+            h = da * h + (dtt * xt)[:, :, None] * bt[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, ct)
+            return h, y
+
+        h1, ys = jax.lax.scan(step, h0,
+                              (xck.transpose(1, 0, 2), dtk.transpose(1, 0, 2),
+                               bk.transpose(1, 0, 2), ck.transpose(1, 0, 2)))
+        return h1, ys
+
+    h0 = shard_act(jnp.zeros((bsz, di, n), jnp.float32), "mamba_state")
+    xs = (xc_f32.reshape(bsz, chunks, csize, di).transpose(1, 0, 2, 3),
+          dt.reshape(bsz, chunks, csize, di).transpose(1, 0, 2, 3),
+          bmat.reshape(bsz, chunks, csize, n).transpose(1, 0, 2, 3),
+          cmat.reshape(bsz, chunks, csize, n).transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = ys.transpose(2, 0, 1, 3).reshape(bsz, s, di)   # [B, S, DI]
+    y = y + xc_f32 * params["d_skip"]
+    y = (y.astype(DTYPE) * jax.nn.silu(z))
+    return y @ params["out_proj"]
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # [B, d_conv-1, DI] rolling conv window
+    ssm: jax.Array    # [B, DI, N]
+
+
+def init_mamba_state(cfg, batch: int) -> MambaState:
+    di, n = d_inner(cfg), cfg.mamba_d_state
+    return MambaState(
+        jnp.zeros((batch, cfg.mamba_d_conv - 1, di), DTYPE),
+        shard_act(jnp.zeros((batch, di, n), jnp.float32), "mamba_state"))
+
+
+def mamba_decode(params, x, cfg, state: MambaState):
+    """One-token step. x [B, 1, D] -> ([B, 1, D], new state)."""
+    xz = x @ params["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)                  # [B,1,DI]
+    window = jnp.concatenate([state.conv, xr], axis=1)  # [B, kw, DI]
+    xc = jnp.einsum("bkd,kd->bd", window, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc)[:, None, :]                   # [B,1,DI]
+    dt, bmat, cmat = _ssm_params(params, xc, cfg)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt[:, 0, :, None] * a)                # [B,DI,N]
+    h = da * state.ssm + (dt[:, 0] * xc[:, 0].astype(jnp.float32))[:, :, None] \
+        * bmat[:, 0][:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])
+    y = y + xc[:, 0].astype(jnp.float32) * params["d_skip"]
+    out = (y[:, None, :].astype(DTYPE) * jax.nn.silu(z)) @ params["out_proj"]
+    return out, MambaState(window[:, 1:], h)

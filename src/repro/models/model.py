@@ -1,0 +1,130 @@
+"""LMModel facade: uniform init / loss / prefill / decode over all assigned
+architectures, plus ShapeDtypeStruct input specs for the dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import encdec, transformer
+from .layers import DTYPE
+
+
+@dataclasses.dataclass
+class LMModel:
+    cfg: ArchConfig
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.cfg.family == "encdec"
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key) -> dict:
+        if self.is_encdec:
+            return encdec.init_params(key, self.cfg)
+        return transformer.init_params(key, self.cfg)
+
+    # -- train ------------------------------------------------------------------
+    def loss(self, params, batch) -> jax.Array:
+        if self.is_encdec:
+            return encdec.loss_fn(params, self.cfg, batch)
+        return transformer.loss_fn(params, self.cfg, batch)
+
+    def forward(self, params, batch):
+        mod = encdec if self.is_encdec else transformer
+        return mod.forward(params, self.cfg, batch)
+
+    # -- serve ------------------------------------------------------------------
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        if self.is_encdec:
+            return encdec.prefill(params, self.cfg, batch)
+        return transformer.prefill(params, self.cfg, batch, max_len)
+
+    def decode_step(self, params, tokens, caches, pos):
+        mod = encdec if self.is_encdec else transformer
+        return mod.decode_step(params, self.cfg, tokens, caches, pos)
+
+    def init_caches(self, batch: int, max_len: int):
+        assert not self.is_encdec, "encdec caches come from prefill()"
+        return transformer.init_caches(self.cfg, batch, max_len)
+
+    # -- dry-run input specs -------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+        train  -> the train_step batch
+        prefill-> the prompt batch
+        decode -> (tokens [B,1], pos) -- caches come from cache_specs().
+        """
+        b, s = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        i32 = jnp.int32
+        if self.is_encdec:
+            s_dec = max(s // 4, 16)     # text shorter than audio frames
+            if shape.kind == "train":
+                return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), DTYPE),
+                        "tokens": jax.ShapeDtypeStruct((b, s_dec), i32),
+                        "labels": jax.ShapeDtypeStruct((b, s_dec), i32)}
+            if shape.kind == "prefill":
+                return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), DTYPE)}
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        if cfg.embed_frontend_stub:     # vlm backbone: patch embeddings
+            if shape.kind == "train":
+                return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), DTYPE),
+                        "labels": jax.ShapeDtypeStruct((b, s), i32)}
+            if shape.kind == "prefill":
+                return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), DTYPE)}
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    def cache_specs(self, shape: ShapeSpec):
+        """ShapeDtypeStructs for decode caches (KV of seq_len per shape)."""
+        b, s = shape.global_batch, shape.seq_len
+        if self.is_encdec:
+            t = s
+            k, dh = self.cfg.n_kv, self.cfg.head_dim
+            self_spec = jax.eval_shape(
+                lambda: encdec_attention_caches(self.cfg, b))
+            return {"self": self_spec,
+                    "cross_k": jax.ShapeDtypeStruct(
+                        (self.cfg.n_layers, b, t, k, dh), DTYPE),
+                    "cross_v": jax.ShapeDtypeStruct(
+                        (self.cfg.n_layers, b, t, k, dh), DTYPE)}
+        return jax.eval_shape(
+            lambda: transformer.init_caches(self.cfg, b, s))
+
+
+def encdec_attention_caches(cfg, b):
+    from . import attention as attn
+    return jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[attn.init_kv_cache(cfg, b, encdec.SELF_BUFFER)
+          for _ in range(cfg.n_layers)])
+
+
+def build_model(cfg: ArchConfig) -> LMModel:
+    return LMModel(cfg)
+
+
+def synthetic_batch(model: LMModel, shape: ShapeSpec, seed: int = 0):
+    """Concrete random batch matching input_specs (smoke tests, examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, spec in model.input_specs(shape).items():
+        if spec.dtype == jnp.int32:
+            out[name] = jnp.asarray(
+                rng.integers(0, model.cfg.vocab, spec.shape, dtype=np.int32))
+        else:
+            out[name] = jnp.asarray(
+                rng.normal(0, 1, spec.shape).astype(np.float32), dtype=spec.dtype)
+    return out

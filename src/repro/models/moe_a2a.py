@@ -1,0 +1,134 @@
+"""Explicit expert-parallel MoE dispatch via shard_map (§Perf hillclimb 3).
+
+This is the paper's UcxExchange discipline applied to MoE: instead of
+letting GSPMD re-layout the capacity-padded [E, C, D] bucket tensor across
+the whole mesh (a full all-to-all of padded buckets, twice), each (dp, tp)
+program selects the tokens destined for ITS local experts directly —
+activations are tp-replicated, so dispatch needs no collective at all —
+and a single psum over the tp axis combines the expert outputs.
+
+Collective volume per MoE layer:
+    GSPMD buckets:  2 x E*C*D        (dispatch + combine, padding included)
+    explicit psum:  ~2 x B*S*D       (one ring all-reduce of the output)
+For dbrx (E=16, top-4, cap 1.25): E*C*D = 5*B*S*D per direction -> the
+explicit path moves ~5x fewer bytes. Verified numerically equivalent to
+the gspmd path in tests/test_moe_dispatch.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .layers import DTYPE
+from .sharding import current_axes, current_mesh
+
+
+def _local_moe(flat, params, cfg, e_lo, e_local: int, cap: int):
+    """Compute this shard's experts' contribution for ALL tokens.
+
+    flat [N, D]; expert weights are the local slices [E_loc, D, F]; e_lo may
+    be traced (lax.axis_index). Routing is computed redundantly on every tp
+    shard (cheap: one [N, E] matmul) — the paper's 'metadata is cheap, move
+    no data' tradeoff."""
+    n, d = flat.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = flat.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs, axis=0)
+    assign = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0) / (n * k)
+    aux = e * jnp.sum(me * assign)
+
+    eid = topi.reshape(-1)
+    tok = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    w = topw.reshape(-1).astype(DTYPE)
+    # keep only copies routed to local experts: rel in [0, e_local)
+    rel = eid - e_lo
+    local = (rel >= 0) & (rel < e_local)
+    sort_key = jnp.where(local, rel, e_local)
+    order = jnp.argsort(sort_key, stable=True).astype(jnp.int32)
+    sorted_rel = jnp.take(sort_key, order)
+    first = jnp.searchsorted(sorted_rel,
+                             jnp.arange(e_local + 1, dtype=jnp.int32),
+                             side="left")
+    rank = jnp.arange(n * k, dtype=jnp.int32) - jnp.take(
+        first, jnp.clip(sorted_rel, 0, e_local))
+    keep = (sorted_rel < e_local) & (rank < cap)
+    slot = jnp.where(keep, sorted_rel * cap + rank, e_local * cap)
+    slot_tok = jnp.zeros((e_local * cap,), jnp.int32).at[slot].set(
+        jnp.take(tok, order), mode="drop")
+    slot_w = jnp.zeros((e_local * cap,), DTYPE).at[slot].set(
+        jnp.take(w, order), mode="drop")
+
+    buckets = jnp.take(flat, slot_tok, axis=0).reshape(e_local, cap, d)
+    buckets = buckets * (slot_w.reshape(e_local, cap, 1) != 0)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buckets, params["experts_w1"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buckets, params["experts_w3"])
+    y = jnp.einsum("ecf,efd->ecd", h, params["experts_w2"])
+    y_flat = y.reshape(e_local * cap, d) * slot_w[:, None]
+    out = jnp.zeros((n, d), DTYPE).at[slot_tok].add(y_flat)
+    return out, aux
+
+
+def moe_ffn_a2a(params, x, cfg):
+    """x [B, S, D] -> (y, aux). Requires an active mesh+axes context with a
+    tp axis dividing n_experts; falls back to local compute otherwise."""
+    from .moe import _capacity
+
+    axes, mesh = current_axes(), current_mesh()
+    b, s, d = x.shape
+    cap = _capacity(b * s, cfg)
+
+    if (axes is None or mesh is None or axes.tp is None
+            or cfg.n_experts % axes.tp_size != 0):
+        out, aux = _local_moe(x.reshape(b * s, d), params, cfg,
+                              jnp.int32(0), cfg.n_experts, cap)
+        out = out.reshape(b, s, d)
+        if cfg.n_shared_experts:
+            out = out + _shared(params, x)
+        return out, aux
+
+    tp = axes.tp
+    e_local = cfg.n_experts // axes.tp_size
+    # batch shards over dp when divisible; tiny decode batches replicate
+    # (every dp row computes the same tokens — correct, just redundant)
+    dp_splits = b % axes.dp_size == 0 and b >= axes.dp_size
+    dp_spec = axes.dp_spec if dp_splits else None
+    # per-dp-shard capacity: each program routes only its local tokens
+    local_tokens = (b * s // axes.dp_size) if dp_splits else (b * s)
+    cap = _capacity(max(local_tokens, 1), cfg)
+
+    def body(xs, router, w1, w3, w2):
+        n_loc = xs.shape[0] * xs.shape[1]
+        flat = xs.reshape(n_loc, d)
+        rank = jax.lax.axis_index(tp)
+        e_lo = (rank * e_local).astype(jnp.int32)
+        p_local = {"router": router, "experts_w1": w1, "experts_w3": w3,
+                   "experts_w2": w2}
+        out, aux = _local_moe(flat, p_local, cfg, e_lo, e_local, cap)
+        # combine: one ring all-reduce of the output (the return exchange)
+        out = jax.lax.psum(out, tp)
+        aux = jax.lax.psum(aux, tp) / axes.tp_size
+        return out.reshape(xs.shape), aux
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp_spec, None, None), P(None, None),
+                  P(tp, None, None), P(tp, None, None), P(tp, None, None)),
+        out_specs=(P(dp_spec, None, None), P()),
+        check_rep=False)
+    out, aux = fn(x, params["router"], params["experts_w1"],
+                  params["experts_w3"], params["experts_w2"])
+    if cfg.n_shared_experts:
+        out = out + _shared(params, x)
+    return out, aux
+
+
+def _shared(params, x):
+    h = jax.nn.silu(x @ params["shared_w1"]) * (x @ params["shared_w3"])
+    return h @ params["shared_w2"]

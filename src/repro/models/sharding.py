@@ -1,0 +1,214 @@
+"""Sharding policy: maps tensor roles to PartitionSpecs on the production
+mesh (DESIGN.md §5).
+
+* ``dp`` axes shard the batch (and FSDP-shard parameters/optimizer state),
+* ``tp`` axis shards heads / ffn-hidden / vocab / experts (and the KV-cache
+  sequence dimension during decode).
+
+The policy is applied two ways:
+* parameter specs: path-based matching over the param pytree (for pjit
+  in_shardings),
+* activation constraints: ``shard_act(x, role)`` inside model code, a no-op
+  unless a policy is active (so smoke tests run without any mesh).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    dp: Tuple[str, ...] = ()          # e.g. ("pod", "data")
+    tp: Optional[str] = None          # e.g. "model"
+    dp_size: int = 1
+    tp_size: int = 1
+    # ZeRO stage for the dp axes: 3 = params + optimizer dp-sharded (per-
+    # layer weight all-gathers, lowest memory); 1 = params replicated on dp
+    # (only optimizer state dp-sharded; one param all-gather per step).
+    # §Perf hillclimb 2 trades these off for granite_34b.
+    zero_stage: int = 3
+
+    @property
+    def dp_spec(self):
+        return self.dp if len(self.dp) != 1 else self.dp[0]
+
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_axes(axes: Optional[Axes], mesh=None):
+    _ACTIVE.append((axes, mesh))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def current_axes() -> Optional[Axes]:
+    return _ACTIVE[-1][0] if _ACTIVE else None
+
+
+def current_mesh():
+    return _ACTIVE[-1][1] if _ACTIVE else None
+
+
+def _maybe(x, spec):
+    ax = current_axes()
+    if ax is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def shard_act(x, role: str):
+    """Constrain an activation. Roles:
+    tokens [B,S] | hidden [B,S,D] | heads [B,S,H,dh] | ffn [B,S,F] |
+    logits [B,S,V] | experts [E,C,D] | kv_cache [B,S,K,dh]"""
+    ax = current_axes()
+    if ax is None:
+        return x
+    dp, tp = ax.dp_spec, ax.tp
+    if role == "tokens":
+        return _maybe(x, (dp, None))
+    if role == "hidden":
+        return _maybe(x, (dp, None, None))
+    if role == "heads":
+        if _div(x.shape[2], ax.tp_size):
+            return _maybe(x, (dp, None, tp, None))
+        return _maybe(x, (dp, None, None, None))
+    if role == "ffn":
+        return _maybe(x, (dp, None, tp))
+    if role == "logits":
+        return _maybe(x, (dp, None, tp))
+    if role == "experts":                 # [E, C, D]
+        if _div(x.shape[0], ax.tp_size):
+            return _maybe(x, (tp, None, None))
+        return x
+    if role == "kv_cache":                # [B, S, K, dh]: seq on tp
+        b, s = x.shape[0], x.shape[1]
+        if _div(b, ax.dp_size) and b > 1:
+            return _maybe(x, (dp, tp, None, None))
+        # batch too small (long-context decode): shard seq over everything
+        return _maybe(x, (None, tuple(ax.dp) + ((tp,) if tp else ()), None, None))
+    if role == "mamba_state":             # [B, DI, N]
+        if _div(x.shape[0], ax.dp_size) and x.shape[0] > 1:
+            return _maybe(x, (dp, tp, None))
+        return _maybe(x, (None, tp, None))
+    raise ValueError(role)
+
+
+# -- parameter specs ---------------------------------------------------------
+
+# path-regex -> spec builder. Leaf shapes have a leading stack dim [G, ...]
+# for block params. fsdp = first dp axis (ZeRO-3 storage sharding).
+def param_spec(path: str, shape: Tuple[int, ...], axes: Axes):
+    tp = axes.tp
+    fsdp = axes.dp[-1] if axes.dp else None   # innermost dp axis
+    # ZeRO-1: optimizer moments stay dp-sharded, parameters do not
+    if axes.zero_stage == 1 and "opt" not in path:
+        fsdp = None
+
+    def ok(dim, size):
+        return size and _div(shape[dim], size)
+
+    d = {  # (regex, lambda -> spec); most specific patterns first
+        r"experts_(w1|w2|w3)$":   # [G, E, D, F] / [G, E, F, D]: EP on tp
+            lambda: (None, tp if ok(1, axes.tp_size) else None,
+                     fsdp if ok(2, axes.dp_size) else None, None),
+        r"router$": lambda: (None,) * len(shape),
+        r"(bias|b_q|b_k|b_v|scale|norm.*|ln.*|a_log|d_skip|dt_bias|gate.*)$":
+            lambda: (None,) * len(shape),
+        r"embed$": lambda: (tp if ok(0, axes.tp_size) else None, None),
+        r"(lm_head)$": lambda: (tp if ok(0, axes.tp_size) else None, None),
+        r"(wq|wk|wv|w1|w3|in_proj|up_proj)$":
+            lambda: (None,) * (len(shape) - 2)
+            + (fsdp if ok(len(shape) - 2, axes.dp_size) else None,
+               tp if ok(len(shape) - 1, axes.tp_size) else None),
+        r"(wo|w2|out_proj|down_proj)$":
+            lambda: (None,) * (len(shape) - 2)
+            + (tp if ok(len(shape) - 2, axes.tp_size) else None,
+               fsdp if ok(len(shape) - 1, axes.dp_size) else None),
+    }
+    for pat, fn in d.items():
+        if re.search(pat, path):
+            return P(*fn())
+    return P(*((None,) * len(shape)))
+
+
+def _norm_path(keystr_path: str) -> str:
+    """".params['blocks']['wq']" -> ".params.blocks.wq" so the role regexes
+    can anchor on name ends."""
+    return re.sub(r"\['?([^'\]]+)'?\]", r".\1", keystr_path)
+
+
+def params_shardings(params, axes: Axes, mesh):
+    """NamedSharding tree for any param-bearing pytree (pjit in_shardings).
+    Works over dicts, NamedTuples (TrainState/AdamWState), lists."""
+    from jax.sharding import NamedSharding
+
+    def leaf_spec(path, leaf):
+        p = _norm_path(jax.tree_util.keystr(path))
+        return NamedSharding(mesh, param_spec(p, leaf.shape, axes))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_shardings(batch_specs, axes: Axes, mesh):
+    """Shardings for a train/prefill batch: leading batch dim on dp."""
+    from jax.sharding import NamedSharding
+
+    def one(spec):
+        b = spec.shape[0]
+        if _div(b, axes.dp_size) and b > 1:
+            return NamedSharding(mesh, P(*( (axes.dp_spec,)
+                                           + (None,) * (len(spec.shape) - 1))))
+        return NamedSharding(mesh, P(*((None,) * len(spec.shape))))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_shardings(cache_specs, seq_len: int, axes: Axes, mesh):
+    """Shardings for decode caches by leaf-shape heuristics.
+
+    KV caches carry the seq_len dimension -> shard it on tp (and on dp too
+    when the batch can't shard); recurrent states shard their big inner dim
+    on tp. Leading group-stack dims are never sharded."""
+    from jax.sharding import NamedSharding
+
+    def one(spec):
+        shape = spec.shape
+        spec_axes = [None] * len(shape)
+        # find the sequence axis (== seq_len or the encdec self buffer)
+        seq_dims = [i for i, d in enumerate(shape) if d == seq_len and i > 0]
+        batch_dims = [i for i, d in enumerate(shape)
+                      if _div(d, axes.dp_size) and d > 1]
+        if seq_dims:
+            sd = seq_dims[-1] if len(shape) >= 4 else seq_dims[0]
+            if batch_dims and batch_dims[0] < sd:
+                spec_axes[batch_dims[0]] = axes.dp_spec
+                spec_axes[sd] = axes.tp
+            else:
+                spec_axes[sd] = tuple(axes.dp) + ((axes.tp,) if axes.tp else ())
+        else:
+            # recurrent state: shard batch if possible, else biggest tp-divisible dim
+            if batch_dims:
+                spec_axes[batch_dims[0]] = axes.dp_spec
+            for i in range(len(shape) - 1, 0, -1):
+                if i != (batch_dims[0] if batch_dims else -1) \
+                        and _div(shape[i], axes.tp_size):
+                    spec_axes[i] = axes.tp
+                    break
+        return NamedSharding(mesh, P(*spec_axes))
+
+    return jax.tree.map(one, cache_specs)

@@ -1,0 +1,145 @@
+"""Decoder LM assembly: embeddings + scan-over-groups of blocks + head.
+
+Layers are stacked in groups of ``cfg.block_period`` (1 for homogeneous
+stacks, 8 for jamba, 4 for xlstm) so the compiled HLO contains one group
+body inside a scan — essential to keep 88-layer compiles fast at 512-way
+SPMD. Group parameter/caches pytrees are uniform across groups and stacked
+on a leading axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .layers import DTYPE, cross_entropy, init_embed, init_rms, rms_norm
+from .sharding import shard_act
+
+
+# Activation checkpointing for the scan-over-groups (§Perf cell B, iter 2):
+# without it the scan stashes per-layer f32 residuals (attention probs,
+# pre-norm activations) for backward — the dominant HBM traffic AND >1 GB
+# per chip of residency at granite-34b scale. With remat only the group
+# inputs are saved and the backward recomputes the rest (+1/3 flops).
+REMAT_BLOCKS = True
+
+
+def n_groups(cfg) -> int:
+    assert cfg.n_layers % cfg.block_period == 0
+    return cfg.n_layers // cfg.block_period
+
+
+def _group_layer_indices(cfg, g: int):
+    return range(g * cfg.block_period, (g + 1) * cfg.block_period)
+
+
+def init_params(key, cfg) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    groups = []
+    for g in range(n_groups(cfg)):
+        gp = {f"pos{j}": blocks.init_layer(keys[i], cfg, i)
+              for j, i in enumerate(_group_layer_indices(cfg, g))}
+        groups.append(gp)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    p = {"embed": init_embed(keys[-1], cfg.vocab, cfg.d_model),
+         "final_norm": init_rms(None, cfg.d_model),
+         "blocks": stacked}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_embed(keys[-2], cfg.vocab, cfg.d_model)
+    return p
+
+
+def _embed_in(params, cfg, batch) -> jax.Array:
+    """tokens or (frontend stub) precomputed embeddings -> [B, S, D]."""
+    if cfg.embed_frontend_stub and "embeds" in batch:
+        return shard_act(batch["embeds"].astype(DTYPE), "hidden")
+    tok = shard_act(batch["tokens"], "tokens")
+    return shard_act(jnp.take(params["embed"], tok, axis=0), "hidden")
+
+
+def _logits(params, cfg, x) -> jax.Array:
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return shard_act(jnp.einsum("bsd,vd->bsv", x, head), "logits")
+
+
+def forward(params, cfg, batch) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits [B,S,V], aux_loss)."""
+    x = _embed_in(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def group_body(carry, gparams):
+        x, aux = carry
+        for j in range(cfg.block_period):
+            i_static = j    # kind depends on i % periods only; offset-safe
+            x, a = blocks.apply_train(gparams[f"pos{j}"], x, cfg, i_static,
+                                      positions)
+            aux = aux + a
+        x = shard_act(x, "hidden")
+        return (x, aux), ()
+
+    body = jax.checkpoint(group_body) if REMAT_BLOCKS else group_body
+    (x, aux), _ = jax.lax.scan(body,
+                               (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg, batch) -> jax.Array:
+    logits, aux = forward(params, cfg, batch)
+    mask = batch.get("mask")
+    return cross_entropy(logits, batch["labels"], mask) + 0.01 * aux
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    groups = []
+    for g in range(n_groups(cfg)):
+        gc = {f"pos{j}": blocks.init_layer_cache(cfg, i, batch, max_len)
+              for j, i in enumerate(_group_layer_indices(cfg, g))}
+        groups.append(gc)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+
+
+def prefill(params, cfg, batch, max_len: Optional[int] = None):
+    """Run the prompt, return (last-token logits, caches)."""
+    x = _embed_in(params, cfg, batch)
+    b, s, _ = x.shape
+    max_len = max_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def group_body(carry, gparams):
+        x, aux = carry
+        caches = {}
+        for j in range(cfg.block_period):
+            x, a, cache = blocks.apply_prefill(gparams[f"pos{j}"], x, cfg, j,
+                                               positions, max_len)
+            caches[f"pos{j}"] = cache
+            aux = aux + a
+        x = shard_act(x, "hidden")
+        return (x, aux), caches
+
+    (x, _), caches = jax.lax.scan(group_body,
+                                  (x, jnp.zeros((), jnp.float32)),
+                                  params["blocks"])
+    return _logits(params, cfg, x[:, -1:, :]), caches
+
+
+def decode_step(params, cfg, tokens, caches, pos):
+    """One decode step: tokens [B, 1] int32, pos scalar -> (logits, caches)."""
+    x = shard_act(jnp.take(params["embed"], tokens, axis=0), "hidden")
+
+    def group_body(x, scanned):
+        gparams, gcaches = scanned
+        new = {}
+        for j in range(cfg.block_period):
+            x, c = blocks.apply_decode(gparams[f"pos{j}"], x, cfg, j,
+                                       gcaches[f"pos{j}"], pos)
+            new[f"pos{j}"] = c
+        return x, new
+
+    x, caches = jax.lax.scan(group_body, x, (params["blocks"], caches))
+    return _logits(params, cfg, x), caches

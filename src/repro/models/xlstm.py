@@ -1,0 +1,283 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory, recurrent).
+
+Follows arXiv:2405.04517 with exponential gating and max-state
+stabilization. Training/prefill run the recurrence as a rematerialized
+nested chunk scan (chunk-boundary states in HBM, within-chunk recompute in
+backward) — the same memory shape as the CUDA kernels' SRAM residency.
+Decode is the O(1) recurrent step, which is what makes xlstm the assigned
+pool's long_500k-capable [ssm] entry.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import DTYPE, _init
+from .sharding import shard_act
+
+CHUNK = 64
+
+
+def d_inner(cfg) -> int:
+    return cfg.mamba_expand * cfg.d_model      # projection factor 2
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d, di, nh = cfg.d_model, d_inner(cfg), cfg.n_heads
+    keys = jax.random.split(key, 7)
+    return {
+        "up_proj": _init(keys[0], (d, 2 * di), d),
+        "wq": _init(keys[1], (di, di), di),
+        "wk": _init(keys[2], (di, di), di),
+        "wv": _init(keys[3], (di, di), di),
+        "gate_i": _init(keys[4], (di, nh), di).astype(jnp.float32),
+        "gate_f": _init(keys[5], (di, nh), di).astype(jnp.float32),
+        "down_proj": _init(keys[6], (di, d), di),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # [B, NH, DH, DH]
+    n: jax.Array   # [B, NH, DH]
+    m: jax.Array   # [B, NH]
+
+
+def init_mlstm_state(cfg, batch: int) -> MLSTMState:
+    nh = cfg.n_heads
+    dh = d_inner(cfg) // nh
+    return MLSTMState(jnp.zeros((batch, nh, dh, dh), jnp.float32),
+                      jnp.zeros((batch, nh, dh), jnp.float32),
+                      jnp.full((batch, nh), -1e30, jnp.float32))
+
+
+def _mlstm_step(state: MLSTMState, qkvif):
+    q, k, v, ig, fg = qkvif          # q/k/v [B,NH,DH]; ig/fg [B,NH]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + state.m, ig)
+    i_p = jnp.exp(ig - m_new)[..., None]
+    f_p = jnp.exp(logf + state.m - m_new)[..., None]
+    c = f_p[..., None] * state.c + i_p[..., None] * (k[..., :, None]
+                                                     * v[..., None, :])
+    n = f_p * state.n + i_p * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                        jnp.exp(-m_new))[..., None]
+    h = jnp.einsum("bhde,bhd->bhe", c, q) / denom
+    return MLSTMState(c, n, m_new), h
+
+
+def _split_heads(x, nh):
+    b, s, di = x.shape
+    return x.reshape(b, s, nh, di // nh)
+
+
+# 'recurrent' streams the matrix state through every token (baseline,
+# paper-faithful port of the CUDA recurrence); 'chunkwise' is the
+# beyond-paper optimized form (EXPERIMENTS.md §Perf hillclimb 1): within a
+# chunk the contribution is a masked decay-weighted q@k^T matmul (MXU), the
+# [DH,DH] state only crosses HBM at chunk boundaries.
+MLSTM_MODE = "chunkwise"          # chunkwise | recurrent
+
+
+def mlstm_forward(params, x, cfg, state: MLSTMState = None,
+                  mode: str = None):
+    """x [B, S, D] -> [B, S, D] (+ final state if one was passed)."""
+    b, s, _ = x.shape
+    di, nh = d_inner(cfg), cfg.n_heads
+    dh = di // nh
+    xz = x @ params["up_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)
+    q = _split_heads(xr @ params["wq"], nh).astype(jnp.float32) * dh ** -0.5
+    k = _split_heads(xr @ params["wk"], nh).astype(jnp.float32) * dh ** -0.5
+    v = _split_heads(xr @ params["wv"], nh).astype(jnp.float32)
+    ig = (xr.astype(jnp.float32) @ params["gate_i"])      # [B,S,NH]
+    fg = (xr.astype(jnp.float32) @ params["gate_f"])
+
+    s0 = state if state is not None else init_mlstm_state(cfg, b)
+    mode = mode or MLSTM_MODE
+    if mode == "chunkwise" and s > 1:
+        s1, h = _mlstm_chunkwise(q, k, v, ig, fg, s0)
+    else:
+        s1, h = _mlstm_recurrent(q, k, v, ig, fg, s0)
+    h = h.reshape(b, s, di).astype(DTYPE)
+    out = (h * jax.nn.silu(z)) @ params["down_proj"]
+    return (out, s1) if state is not None else out
+
+
+def _mlstm_recurrent(q, k, v, ig, fg, s0):
+    b, s, nh, dh = q.shape
+    chunks = s // CHUNK if (s >= CHUNK and s % CHUNK == 0) else 1
+    cs = s // chunks
+
+    def to_heads(a):
+        return a  # already [B,S,NH,...]
+
+    def chunk_body(st, args):
+        def step(stt, t):
+            return _mlstm_step(stt, t)
+        st1, hs = jax.lax.scan(step, st,
+                               jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1),
+                                            args))
+        return st1, hs
+
+    args = jax.tree.map(
+        lambda a: a.reshape((b, chunks, cs) + a.shape[2:]).swapaxes(0, 1),
+        (q, k, v, ig, fg))
+    s1, hs = jax.lax.scan(jax.checkpoint(chunk_body), s0, args)
+    # hs: [chunks, cs, B, NH, DH] -> [B, S, NH*DH]
+    h = hs.transpose(2, 0, 1, 3, 4)
+    return s1, h
+
+
+def _mlstm_chunkwise(q, k, v, ig, fg, s0: MLSTMState):
+    """Stabilized chunkwise-parallel mLSTM (beyond-paper optimization).
+
+    Expanding the recurrence within a chunk (cf. arXiv:2405.04517 App. +
+    mlstm_kernels): with b_t = cumsum(log f) and chunk-entry state
+    (C0, n0, m0),
+
+        m_t   = max(m0 + b_t, max_{s<=t}(b_t - b_s + i_s))
+        num_t = sum_{s<=t} e^{b_t-b_s+i_s-m_t} (q_t.k_s) v_s
+                + e^{m0+b_t-m_t} q_t @ C0
+        den_t = sum_{s<=t} e^{b_t-b_s+i_s-m_t} (q_t.k_s)
+                + e^{m0+b_t-m_t} q_t.n0
+        h_t   = num_t / max(|den_t|, e^{-m_t})
+
+    and the chunk-exit state is the same expansion at t=L. Verified against
+    the recurrent form in tests/test_xlstm_equivalence.py.
+    """
+    b, s, nh, dh = q.shape
+    L = min(CHUNK, s)
+    assert s % L == 0
+    chunks = s // L
+
+    def resh(a):  # [B,S,...] -> [chunks, B, NH, L, ...]
+        a = a.reshape((b, chunks, L) + a.shape[2:])
+        if a.ndim == 5:
+            return a.transpose(1, 0, 3, 2, 4)     # [C,B,NH,L,DH]
+        return a.transpose(1, 0, 3, 2)            # [C,B,NH,L]
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    igc, fgc = resh(ig), resh(fg)
+
+    def chunk(carry, args):
+        c0, n0, m0 = carry                         # [B,NH,DH,DH],[B,NH,DH],[B,NH]
+        qk, kk, vk, ik, fk = args                  # [B,NH,L,...]
+        lf = jax.nn.log_sigmoid(fk)                # [B,NH,L]
+        bcum = jnp.cumsum(lf, axis=-1)             # b_t
+        a_s = ik - bcum                            # i_s - b_s
+        # running max over s<=t of (b_t - b_s + i_s) = b_t + cummax(a_s)
+        run = bcum + jax.lax.cummax(a_s, axis=a_s.ndim - 1)
+        m = jnp.maximum(m0[..., None] + bcum, run)             # [B,NH,L]
+        # decay matrix W[t,s] = exp(b_t - b_s + i_s - m_t), s<=t
+        expo = (bcum[..., :, None] - bcum[..., None, :]
+                + ik[..., None, :] - m[..., :, None])          # [B,NH,L,L]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(mask, jnp.exp(expo), 0.0)
+        g = jnp.einsum("bhtd,bhsd->bhts", qk, kk)              # MXU
+        gw = g * w
+        inter = jnp.exp(m0[..., None] + bcum - m)              # [B,NH,L]
+        num = jnp.einsum("bhts,bhsd->bhtd", gw, vk) \
+            + inter[..., None] * jnp.einsum("bhtd,bhde->bhte", qk, c0)
+        den = jnp.sum(gw, axis=-1) + inter * jnp.einsum(
+            "bhtd,bhd->bht", qk, n0)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+
+        # chunk-exit state (expansion at t = L)
+        bL = bcum[..., -1:]                                    # [B,NH,1]
+        m_exit = jnp.maximum(m0 + bL[..., 0],
+                             jnp.max(bL - bcum + ik, axis=-1))
+        wexit = jnp.exp(bL - bcum + ik - m_exit[..., None])    # [B,NH,L]
+        c1 = jnp.exp(m0 + bL[..., 0] - m_exit)[..., None, None] * c0 \
+            + jnp.einsum("bhs,bhsd,bhse->bhde", wexit, kk, vk)
+        n1 = jnp.exp(m0 + bL[..., 0] - m_exit)[..., None] * n0 \
+            + jnp.einsum("bhs,bhsd->bhd", wexit, kk)
+        return (c1, n1, m_exit), h
+
+    (c1, n1, m1), hs = jax.lax.scan(
+        jax.checkpoint(chunk), (s0.c, s0.n, s0.m), (qc, kc, vc, igc, fgc))
+    # hs: [chunks, B, NH, L, DH] -> [B, S, NH, DH]
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, nh, dh)
+    return MLSTMState(c1, n1, m1), h
+
+
+def mlstm_decode(params, x, cfg, state: MLSTMState):
+    out, s1 = mlstm_forward(params, x, cfg, state)
+    return out, s1
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d, nh = cfg.d_model, cfg.n_heads
+    dh = d // nh
+    keys = jax.random.split(key, 2)
+    return {
+        "wx": _init(keys[0], (d, 4 * d), d).astype(jnp.float32),
+        "rh": (_init(keys[1], (nh, dh, 4 * dh), dh)).astype(jnp.float32),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+    }
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array   # [B, NH, DH]
+    c: jax.Array
+    n: jax.Array
+    m: jax.Array
+
+
+def init_slstm_state(cfg, batch: int) -> SLSTMState:
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return SLSTMState(z, z, z + 1e-6, jnp.full((batch, nh, dh), -1e30))
+
+
+def _slstm_step(params, cfg, state: SLSTMState, xt):
+    """xt [B, D] fp32."""
+    b = xt.shape[0]
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    pre = xt @ params["wx"] + params["bias"]
+    pre = pre.reshape(b, nh, 4 * dh) \
+        + jnp.einsum("bhd,hde->bhe", state.h, params["rh"])
+    zg, ig, fg, og = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + state.m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(logf + state.m - m_new)
+    c = f_p * state.c + i_p * jnp.tanh(zg)
+    n = f_p * state.n + i_p
+    h = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(h, c, n, m_new), h
+
+
+def slstm_forward(params, x, cfg, state: SLSTMState = None):
+    b, s, d = x.shape
+    s0 = state if state is not None else init_slstm_state(cfg, b)
+    chunks = max(s // CHUNK, 1)
+    cs = s // chunks
+    xf = x.astype(jnp.float32).reshape(b, chunks, cs, d).swapaxes(0, 1)
+
+    def chunk_body(st, xk):
+        def step(stt, xt):
+            return _slstm_step(params, cfg, stt, xt)
+        return jax.lax.scan(step, st, jnp.swapaxes(xk, 0, 1))
+
+    s1, hs = jax.lax.scan(jax.checkpoint(chunk_body), s0, xf)
+    h = hs.transpose(2, 0, 1, 3, 4).reshape(b, s, d).astype(DTYPE)
+    out = h
+    return (out, s1) if state is not None else out
+
+
+def slstm_decode(params, x, cfg, state: SLSTMState):
+    out, s1 = slstm_forward(params, x, cfg, state)
+    return out, s1

@@ -1,0 +1,2 @@
+from .fault import (FailureInjector, StragglerMonitor, TrainLoop,  # noqa: F401
+                    WorkerFailure)

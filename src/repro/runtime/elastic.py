@@ -1,0 +1,32 @@
+"""Elastic scaling: reshard a training state across different mesh shapes.
+
+Checkpoints carry global host arrays (see checkpoint/ckpt.py), so scaling
+from N to M chips is: build the new mesh, derive the new sharding tree from
+the same policy, restore. This module packages that as one call and also
+supports in-memory resharding (no disk) for planned rescales.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..launch.mesh import axes_of
+from ..models import sharding as shp
+
+
+def reshard_state(state, new_mesh):
+    """Re-place every leaf of ``state`` for ``new_mesh`` (in-memory path)."""
+    axes = axes_of(new_mesh)
+    shardings = shp.params_shardings(state, axes, new_mesh)
+    host = jax.tree.map(lambda x: jax.device_get(x), state)
+    return jax.tree.map(lambda arr, sh: jax.device_put(arr, sh),
+                        host, shardings)
+
+
+def restore_for_mesh(ckpt_dir: str, template, new_mesh):
+    """Disk path: newest checkpoint restored directly onto ``new_mesh``."""
+    from ..checkpoint.ckpt import restore_latest
+
+    axes = axes_of(new_mesh)
+    shardings = shp.params_shardings(template, axes, new_mesh)
+    return restore_latest(ckpt_dir, template, shardings)

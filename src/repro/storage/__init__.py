@@ -1,0 +1,15 @@
+"""Storage layer (paper §2.2).
+
+Two formats:
+
+* ``colchunk`` — the paper's custom minimal format: one raw binary file per
+  (column, chunk), all metadata encoded in the file name, strings as
+  dictionary sidecars. Reads are a single memmap -> device transfer with no
+  interpretation (the KvikIO/GDS read path).
+* ``paged``   — a Parquet-shaped baseline: one file per table with nested
+  file/row-group/page metadata that must be interpreted during the read.
+  Exists to quantify the format-overhead gap the paper measures (10x).
+"""
+
+from .colchunk import ColumnChunkTable, read_column_chunk, write_table  # noqa: F401
+from .paged import PagedTable, write_paged_table  # noqa: F401

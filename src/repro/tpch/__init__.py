@@ -1,0 +1,10 @@
+"""TPC-H-like benchmark substrate (paper §2-3).
+
+dbgen-style synthetic data generation, the 8 table schemas, all 22 query
+plans in the engine's plan DSL, and a pure-numpy oracle for validation.
+As in the paper, queries are "functionally identical to TPC-H" but results
+are not audited TPC-H results.
+"""
+
+from .dbgen import generate, load_catalog, write_dataset  # noqa: F401
+from .queries import QUERIES, build_query  # noqa: F401

@@ -1,0 +1,4 @@
+"""Training runtime: optimizer, train step, gradient compression."""
+
+from .optimizer import AdamWState, adamw_init, adamw_update, lr_schedule  # noqa: F401
+from .train_step import TrainState, make_train_step, train_state_init  # noqa: F401

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate a
+REDUCED config of the same family, run one forward + one train step + a
+prefill/decode step on CPU, assert output shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, ShapeSpec, get_config
+from repro.models import build_model
+from repro.models.model import synthetic_batch
+
+SMOKE_TRAIN = ShapeSpec("smoke_train", seq_len=64, global_batch=2, kind="train")
+SMOKE_PREFILL = ShapeSpec("smoke_prefill", seq_len=64, global_batch=2,
+                          kind="prefill")
+SMOKE_DECODE = ShapeSpec("smoke_decode", seq_len=64, global_batch=2,
+                         kind="decode")
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {a: build_model(get_config(a, smoke=True)) for a in ARCH_IDS}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, models):
+    model = models[arch]
+    batch = synthetic_batch(model, SMOKE_TRAIN)
+    params = model.init(jax.random.key(0))
+    logits, aux = jax.jit(model.forward)(params, batch)
+    b = SMOKE_TRAIN.global_batch
+    s_out = batch["labels"].shape[1]
+    assert logits.shape == (b, s_out, model.cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+    assert bool(jnp.isfinite(aux)), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_reduces_loss_and_finite_grads(arch, models):
+    model = models[arch]
+    batch = synthetic_batch(model, SMOKE_TRAIN)
+    params = model.init(jax.random.key(1))
+
+    @jax.jit
+    def step(p):
+        loss, grads = jax.value_and_grad(model.loss)(p, batch)
+        # plain SGD nudge: loss on the same batch must drop
+        p2 = jax.tree.map(lambda w, g: w - 0.3 * g.astype(w.dtype), p, grads)
+        return loss, p2, grads
+
+    loss0, params2, grads = step(params)
+    assert bool(jnp.isfinite(loss0)), arch
+    finite = jax.tree.map(lambda g: bool(jnp.isfinite(g).all()), grads)
+    assert all(jax.tree.leaves(finite)), arch
+    loss1 = jax.jit(model.loss)(params2, batch)
+    assert float(loss1) < float(loss0), (arch, float(loss0), float(loss1))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistent_with_forward(arch, models):
+    """Greedy decode logits from the cached path must match the
+    full-sequence forward at the same position."""
+    model = models[arch]
+    cfg = model.cfg
+    params = model.init(jax.random.key(2))
+    b, s = 2, 32
+    rng = np.random.default_rng(0)
+
+    if cfg.family == "encdec":
+        frames = jnp.asarray(rng.normal(0, 1, (b, s, cfg.d_model)),
+                             dtype=jnp.bfloat16)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, 4)), jnp.int32)
+        full_logits, _ = jax.jit(model.forward)(
+            params, {"frames": frames, "tokens": tokens})
+        caches = model.prefill(params, {"frames": frames})
+        x = tokens[:, :1]
+        logits = None
+        for pos in range(tokens.shape[1]):
+            logits, caches = jax.jit(model.decode_step)(
+                params, tokens[:, pos: pos + 1], caches, jnp.int32(pos))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full_logits[:, -1], np.float32), rtol=0.15, atol=0.15)
+        return
+
+    if cfg.embed_frontend_stub:
+        pytest.skip("vlm backbone decode exercised via token path in dryrun")
+
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    full_logits, _ = jax.jit(model.forward)(params, {"tokens": tokens})
+
+    # incremental decode from an empty cache must reproduce the forward
+    caches = model.init_caches(b, s)
+    logits = None
+    step = jax.jit(model.decode_step)
+    for pos in range(s):
+        logits, caches = step(params, tokens[:, pos: pos + 1], caches,
+                              jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
+                               np.asarray(full_logits[:, -1], np.float32),
+                               rtol=0.15, atol=0.15)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_full_config_matches_family(arch):
+    """The analytic count on the FULL config lands in the advertised range
+    (catches config typos without allocating the model)."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "qwen2_1_5b": (1.0e9, 2.2e9),
+        "phi4_mini_3_8b": (3.0e9, 5.0e9),
+        "granite_3_8b": (6.5e9, 10e9),
+        "granite_34b": (30e9, 40e9),
+        "pixtral_12b": (10e9, 14.5e9),
+        "dbrx_132b": (110e9, 145e9),
+        "deepseek_moe_16b": (13e9, 20e9),
+        "xlstm_125m": (0.09e9, 0.2e9),
+        "jamba_v0_1_52b": (45e9, 60e9),
+        "seamless_m4t_large_v2": (1.2e9, 3.0e9),
+    }[arch]
+    assert expected[0] <= n <= expected[1], (arch, n)

@@ -1,0 +1,309 @@
+"""Unit + property tests for the core engine primitives and operators."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import dtypes as dt
+from repro.core import relational as rel
+from repro.core import operators as ops
+from repro.core.expr import col, lit, prefix_code, year
+from repro.core.table import DeviceTable, concat_tables
+
+
+def _table(data, schema, capacity=None):
+    return DeviceTable.from_numpy(data, schema, capacity)
+
+
+# ---------------------------------------------------------------------------
+# relational primitives
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=80),
+       st.booleans())
+def test_lexsort_single_key_matches_numpy(vals, desc):
+    v = np.array(vals, dtype=np.int32)
+    validity = np.ones(len(v), dtype=bool)
+    order = np.asarray(rel.lexsort([jnp.asarray(v)], jnp.asarray(validity),
+                                   [desc]))
+    got = v[order]
+    want = np.sort(v)[::-1] if desc else np.sort(v)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5)),
+                min_size=1, max_size=60))
+def test_lexsort_two_keys_stable(pairs):
+    a = np.array([p[0] for p in pairs], dtype=np.int32)
+    b = np.array([p[1] for p in pairs], dtype=np.int32)
+    validity = np.ones(len(a), dtype=bool)
+    order = np.asarray(rel.lexsort([jnp.asarray(a), jnp.asarray(b)],
+                                   jnp.asarray(validity)))
+    want = np.lexsort((b, a))   # numpy: last key is primary
+    np.testing.assert_array_equal(order, want)
+
+
+def test_lexsort_invalid_rows_last():
+    v = np.array([5, 1, 3, 2], dtype=np.int32)
+    validity = np.array([True, False, True, True])
+    order = np.asarray(rel.lexsort([jnp.asarray(v)], jnp.asarray(validity)))
+    assert order[-1] == 1          # the invalid row
+    np.testing.assert_array_equal(v[order[:3]], [2, 3, 5])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=100))
+def test_group_rows_matches_numpy_unique(keys):
+    k = np.array(keys, dtype=np.int32)
+    validity = np.ones(len(k), dtype=bool)
+    g = rel.group_rows([jnp.asarray(k)], jnp.asarray(validity), 16)
+    assert int(g.num_groups) == len(np.unique(k))
+    # every group's representative key is a real key
+    reps = np.asarray(g.key_rows)[: int(g.num_groups)]
+    assert set(k[reps].tolist()) == set(np.unique(k).tolist())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.floats(-100, 100)),
+                min_size=1, max_size=100))
+def test_segment_sum_matches_numpy(rows):
+    k = np.array([r[0] for r in rows], dtype=np.int32)
+    v = np.array([r[1] for r in rows], dtype=np.float32)
+    validity = np.ones(len(k), dtype=bool)
+    g = rel.group_rows([jnp.asarray(k)], jnp.asarray(validity), 8)
+    sums = np.asarray(rel.segment_agg(jnp.asarray(v), g.gids, g.order,
+                                      jnp.asarray(validity), 8, "sum"))
+    uniq = np.unique(k)
+    want = np.array([v[k == u].sum() for u in uniq], dtype=np.float32)
+    got = {int(k[r]): s for r, s in zip(np.asarray(g.key_rows)[:len(uniq)],
+                                        sums[:len(uniq)])}
+    for u, w in zip(uniq, want):
+        np.testing.assert_allclose(got[int(u)], w, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=60),
+       st.lists(st.integers(0, 50), min_size=1, max_size=60))
+def test_join_probe_matches_numpy(build, probe):
+    bk = np.unique(np.array(build, dtype=np.int32))     # unique build side
+    pk = np.array(probe, dtype=np.int32)
+    bt = rel.join_build(jnp.asarray(bk), jnp.ones(len(bk), dtype=bool))
+    res = rel.join_probe(bt, jnp.asarray(pk), jnp.ones(len(pk), dtype=bool), 1)
+    matched = np.zeros(len(pk), dtype=bool)
+    matched[np.asarray(res.probe_idx)[np.asarray(res.valid)]] = True
+    np.testing.assert_array_equal(matched, np.isin(pk, bk))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=40),
+       st.integers(2, 5))
+def test_partition_layout_conserves_rows(keys, nparts):
+    k = np.array(keys, dtype=np.int32)
+    validity = np.ones(len(k), dtype=bool)
+    pids = rel.partition_ids([jnp.asarray(k)], jnp.asarray(validity), nparts)
+    cap = len(k)    # ample capacity -> nothing dropped
+    gather, out_valid = rel.partition_layout(pids, jnp.asarray(validity),
+                                             nparts, cap)
+    assert int(np.asarray(out_valid).sum()) == len(k)
+    got = np.sort(k[np.asarray(gather)[np.asarray(out_valid)]])
+    np.testing.assert_array_equal(got, np.sort(k))
+    # every row landed in the partition its hash says
+    placed = np.asarray(gather).reshape(nparts, cap)
+    valid2 = np.asarray(out_valid).reshape(nparts, cap)
+    for p in range(nparts):
+        rows = placed[p][valid2[p]]
+        np.testing.assert_array_equal(np.asarray(pids)[rows], p)
+
+
+# ---------------------------------------------------------------------------
+# operators
+# ---------------------------------------------------------------------------
+
+_SCHEMA = {"k": dt.INT32, "v": dt.FLOAT32}
+
+
+def test_filter_project_fused():
+    t = _table({"k": np.arange(10), "v": np.arange(10, dtype=np.float32)},
+               _SCHEMA)
+    fp = ops.FilterProject(col("k") >= 5, [("doubled", col("v") * 2.0)])
+    out = fp.add_input(t)[0]
+    np.testing.assert_allclose(out.to_numpy()["doubled"],
+                               np.arange(5, 10) * 2.0)
+
+
+def test_streaming_aggregation_concat_based():
+    """Paper §3.2: batch-wise partial agg + concat + re-aggregate."""
+    agg = ops.HashAggregation(["k"], [("s", "sum", "v"), ("c", "count", None),
+                                      ("m", "max", "v"), ("a", "avg", "v")],
+                              mode="single", max_groups=8)
+    agg.open()
+    rng = np.random.default_rng(1)
+    ks, vs = [], []
+    for _ in range(5):   # five streamed batches
+        k = rng.integers(0, 5, 64)
+        v = rng.random(64).astype(np.float32)
+        ks.append(k); vs.append(v)
+        assert agg.add_input(_table({"k": k, "v": v}, _SCHEMA)) == []
+    out = agg.finish()[0].to_numpy()
+    k, v = np.concatenate(ks), np.concatenate(vs)
+    order = np.argsort(out["k"])
+    for i, u in enumerate(np.unique(k)):
+        j = order[i]
+        np.testing.assert_allclose(out["s"][j], v[k == u].sum(), rtol=1e-4)
+        assert out["c"][j] == (k == u).sum()
+        np.testing.assert_allclose(out["m"][j], v[k == u].max(), rtol=1e-6)
+        np.testing.assert_allclose(out["a"][j], v[k == u].mean(), rtol=1e-4)
+
+
+def test_partial_final_modes_compose():
+    """Velox Partial/Final modes with an exchange in between."""
+    rng = np.random.default_rng(2)
+    k = rng.integers(0, 6, 256)
+    v = rng.random(256).astype(np.float32)
+    partial = ops.HashAggregation(["k"], [("a", "avg", "v")], "partial",
+                                  max_groups=8)
+    partial.open()
+    partial.add_input(_table({"k": k[:128], "v": v[:128]}, _SCHEMA))
+    p1 = partial.finish()[0]
+    partial.open()
+    partial.add_input(_table({"k": k[128:], "v": v[128:]}, _SCHEMA))
+    p2 = partial.finish()[0]
+    assert "a__sum" in p1.column_names and "a__cnt" in p1.column_names
+    final = ops.HashAggregation(["k"], [("a", "avg", "v")], "final",
+                                max_groups=8)
+    final.open()
+    final.add_input(concat_tables([p1, p2]))
+    out = final.finish()[0].to_numpy()
+    order = np.argsort(out["k"])
+    for i, u in enumerate(np.unique(k)):
+        np.testing.assert_allclose(out["a"][order[i]], v[k == u].mean(),
+                                   rtol=1e-4)
+
+
+def test_partial_emit_threshold_flow_control():
+    agg = ops.HashAggregation(["k"], [("c", "count", None)], "partial",
+                              max_groups=512, emit_rows=4)
+    agg.open()
+    emitted = []
+    for i in range(4):
+        k = np.arange(i * 8, i * 8 + 8)     # all-new groups each batch
+        emitted += agg.add_input(_table({"k": k,
+                                         "v": np.zeros(8, np.float32)},
+                                        _SCHEMA))
+    emitted += agg.finish()
+    assert len(emitted) >= 2                # streamed early at the threshold
+
+
+def test_join_types_against_numpy():
+    rng = np.random.default_rng(3)
+    bk = np.unique(rng.integers(0, 40, 30)).astype(np.int32)
+    bp = (bk * 10).astype(np.int32)
+    pk = rng.integers(0, 40, 100).astype(np.int32)
+    build = _table({"k": bk, "payload": bp}, {"k": dt.INT32, "payload": dt.INT32})
+    probe = _table({"k": pk, "v": np.zeros(100, np.float32)}, _SCHEMA)
+
+    for jt in ("inner", "left_semi", "left_anti"):
+        j = ops.HashJoin(["k"], ["k"], ["payload"] if jt == "inner" else (),
+                         join_type=jt)
+        j.add_build(build)
+        j.seal_build()
+        out = j.add_input(probe)[0].to_numpy()
+        m = np.isin(pk, bk)
+        if jt == "inner":
+            np.testing.assert_array_equal(np.sort(out["k"]), np.sort(pk[m]))
+            np.testing.assert_array_equal(out["payload"], out["k"] * 10)
+        elif jt == "left_semi":
+            np.testing.assert_array_equal(np.sort(out["k"]), np.sort(pk[m]))
+        else:
+            np.testing.assert_array_equal(np.sort(out["k"]), np.sort(pk[~m]))
+
+
+def test_join_expansion_one_to_many():
+    build = _table({"k": np.array([1, 1, 1, 2], np.int32),
+                    "p": np.array([10, 11, 12, 20], np.int32)},
+                   {"k": dt.INT32, "p": dt.INT32})
+    probe = _table({"k": np.array([1, 2, 3], np.int32),
+                    "v": np.zeros(3, np.float32)}, _SCHEMA)
+    j = ops.HashJoin(["k"], ["k"], ["p"], max_matches=4)
+    j.add_build(build)
+    j.seal_build()
+    out = j.add_input(probe)[0].to_numpy()
+    assert sorted(out["p"].tolist()) == [10, 11, 12, 20]
+
+
+def test_left_outer_join_matched_flag():
+    build = _table({"k": np.array([1], np.int32), "p": np.array([9], np.int32)},
+                   {"k": dt.INT32, "p": dt.INT32})
+    probe = _table({"k": np.array([1, 2], np.int32),
+                    "v": np.zeros(2, np.float32)}, _SCHEMA)
+    j = ops.HashJoin(["k"], ["k"], ["p"], join_type="left_outer")
+    j.add_build(build)
+    j.seal_build()
+    out = j.add_input(probe)[0].to_numpy()
+    by_k = dict(zip(out["k"].tolist(),
+                    zip(out["p"].tolist(), out["__matched"].tolist())))
+    assert by_k[1] == (9, True)
+    assert by_k[2] == (0, False)
+
+
+def test_orderby_limit_and_descending():
+    t = _table({"k": np.array([3, 1, 2, 5, 4], np.int32),
+                "v": np.array([1, 2, 3, 4, 5], np.float32)}, _SCHEMA)
+    ob = ops.OrderBy(["k"], [True], limit=3)
+    ob.open()
+    ob.add_input(t)
+    out = ob.finish()[0].to_numpy()
+    np.testing.assert_array_equal(out["k"], [5, 4, 3])
+
+
+def test_compact_moves_valid_rows_front():
+    t = _table({"k": np.arange(8), "v": np.zeros(8, np.float32)}, _SCHEMA)
+    t = t.filter(jnp.asarray(np.array([0, 1, 0, 1, 1, 0, 0, 1], bool)))
+    c = t.compact()
+    assert bool(c.validity[:4].all()) and not bool(c.validity[4:].any())
+    np.testing.assert_array_equal(np.asarray(c.columns["k"][:4]), [1, 3, 4, 7])
+
+
+# ---------------------------------------------------------------------------
+# expressions
+# ---------------------------------------------------------------------------
+
+def test_year_expr_exact_on_boundaries():
+    days = np.array([dt.date_to_i32(s) for s in
+                     ("1992-01-01", "1992-12-31", "1996-02-29", "1998-08-02")],
+                    dtype=np.int32)
+    t = _table({"d": days}, {"d": dt.DATE32})
+    got = np.asarray(year(col("d")).evaluate(t))
+    np.testing.assert_array_equal(got, [1992, 1992, 1996, 1998])
+
+
+def test_prefix_code():
+    phones = dt.encode_bytes(["13-555", "31-123", "07-999"], 15)
+    t = _table({"p": phones}, {"p": dt.bytes_(15)})
+    got = np.asarray(prefix_code(col("p"), 2).evaluate(t))
+    np.testing.assert_array_equal(got, [13, 31, 7])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.text(alphabet="abcx y", min_size=0, max_size=20),
+                min_size=1, max_size=30),
+       st.text(alphabet="abc", min_size=1, max_size=3))
+def test_contains_property(strings, needle):
+    width = 24
+    data = dt.encode_bytes(strings, width)
+    t = _table({"s": data}, {"s": dt.bytes_(width)})
+    got = np.asarray(col("s").contains(needle).evaluate(t))
+    want = np.array([needle in s[:width] for s in strings])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_multi_part_contains_ordered():
+    data = dt.encode_bytes(["xx special yy requests", "requests special",
+                            "specialrequests", "nothing"], 24)
+    t = _table({"s": data}, {"s": dt.bytes_(24)})
+    got = np.asarray(col("s").contains("special", "requests").evaluate(t))
+    np.testing.assert_array_equal(got, [True, False, True, False])

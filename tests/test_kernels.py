@@ -1,0 +1,139 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps + hypothesis
+property tests, all in interpret mode on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.block_prefix_sum import block_prefix_sum
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hash_probe import build_table, hash_probe
+from repro.kernels.radix_histogram import radix_histogram
+from repro.kernels.segmented_agg import segmented_sum
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,s,d", [(1, 1, 128, 64), (2, 2, 256, 64),
+                                     (1, 2, 256, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(b, h, s, d, dtype, causal):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (b, h, s, d)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (b, h, s, d)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (b, h, s, d)), dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_shape_sweep():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(0, 1, (1, 1, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 1, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 1, 256, 64)), jnp.float32)
+    want = ref.flash_attention(q, k, v)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        got = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# segmented aggregation
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 40), st.floats(-10, 10)),
+                min_size=1, max_size=300),
+       st.sampled_from([8, 64, 200]))
+def test_segmented_sum_property(rows, row_block):
+    gids = jnp.asarray([r[0] for r in rows], jnp.int32)
+    vals = jnp.asarray([r[1] for r in rows], jnp.float32)
+    got = segmented_sum(gids, vals, 41, row_block=row_block, interpret=True)
+    want = ref.segmented_agg(gids, vals, 41, "sum")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_segmented_sum_multi_slab():
+    # more groups than one GROUP_BLOCK slab
+    rng = np.random.default_rng(2)
+    n, g = 5000, 2500
+    gids = jnp.asarray(rng.integers(0, g, n), jnp.int32)
+    vals = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    got = segmented_sum(gids, vals, g, interpret=True)
+    want = ref.segmented_agg(gids, vals, g, "sum")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# radix histogram
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=500),
+       st.sampled_from([16, 32]))
+def test_radix_histogram_property(pids, nparts):
+    p = jnp.asarray(pids, jnp.int32)
+    got = radix_histogram(p, nparts, row_block=128, interpret=True)
+    want = ref.radix_histogram(p, nparts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# hash probe
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("table_size,n_keys,n_probes",
+                         [(64, 30, 100), (256, 200, 500), (1024, 100, 64)])
+def test_hash_probe_matches_ref(table_size, n_keys, n_probes):
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.choice(10_000, n_keys, replace=False), jnp.int32)
+    vals = keys * 7
+    tk, tv = build_table(keys, vals, table_size)
+    probes = jnp.asarray(rng.integers(0, 10_000, n_probes), jnp.int32)
+    got_f, got_v = hash_probe(tk, tv, probes, max_probes=table_size,
+                              probe_block=64, interpret=True)
+    want_f, want_v = ref.hash_probe(tk, tv, probes, empty_key=-1)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+    np.testing.assert_array_equal(np.asarray(got_v)[np.asarray(got_f)],
+                                  np.asarray(want_v)[np.asarray(want_f)])
+    # semantic check against plain membership
+    member = np.isin(np.asarray(probes), np.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(got_f), member)
+    np.testing.assert_array_equal(np.asarray(got_v)[member],
+                                  np.asarray(probes)[member] * 7)
+
+
+# ---------------------------------------------------------------------------
+# block prefix sum (compaction addresses)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=600),
+       st.sampled_from([64, 128, 256]))
+def test_block_prefix_sum_property(mask, row_block):
+    m = jnp.asarray(mask, jnp.bool_)
+    pos, total = block_prefix_sum(m, row_block=row_block, interpret=True)
+    want_pos, want_total = ref.block_prefix_sum(m)
+    np.testing.assert_array_equal(np.asarray(pos), np.asarray(want_pos))
+    assert int(total) == int(want_total)
+
+
+def test_prefix_sum_crosses_blocks():
+    m = jnp.ones((1000,), jnp.bool_)
+    pos, total = block_prefix_sum(m, row_block=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(pos), np.arange(1000))
+    assert int(total) == 1000
