@@ -1,39 +1,48 @@
 """Quickstart: run a distributed TPC-H query on the device-resident engine.
 
     PYTHONPATH=src python examples/quickstart.py
+
+(or ``pip install -e .`` once and drop the PYTHONPATH.)
 """
 
 import numpy as np
 
-from repro.core import ICIExchange, Session, dtypes as dt, plan as P
-from repro.core.expr import col, lit
+from repro.core import ICIExchange, Session, dtypes as dt
+from repro.core.expr import col
 from repro.tpch import dbgen, queries
 
 
 def main():
-    # 1) a tiny ad-hoc query on your own data ------------------------------
+    # 1) a tiny ad-hoc query on your own data, in the fluent builder API ---
+    #    every step validates column names/types against the propagated
+    #    schema, and .collect() runs the plan through the rule-based
+    #    optimizer (predicate pushdown, column pruning, join distribution,
+    #    capacity hints) before the driver executes it.
     catalog = dbgen.load_catalog(sf=0.002)          # TPC-H-like tables
     rng = np.random.default_rng(0)
     catalog.register_numpy(
         "events",
         {"user": rng.integers(0, 100, 5000),
          "amount": rng.random(5000).astype(np.float32) * 50},
-        {"user": dt.INT32, "amount": dt.FLOAT32})
-
-    top_spenders = P.OrderBy(
-        P.Aggregation(
-            P.Filter(P.TableScan("events"), col("amount") > 10.0),
-            group_keys=["user"], aggs=[("spend", "sum", "amount")],
-            max_groups=128),
-        keys=["spend"], descending=[True], limit=5)
+        {"user": dt.INT32, "amount": dt.FLOAT32},
+        unique_keys=())
 
     session = Session(catalog, num_workers=4, exchange=ICIExchange(),
                       batch_rows=4096)
-    out = session.execute(top_spenders)
-    print("top spenders:", list(zip(out["user"], np.round(out["spend"], 1))))
+
+    top_spenders = (session.table("events")
+                    .filter(col("amount") > 10.0)
+                    .group_by("user")
+                    .agg(spend=("sum", "amount"))
+                    .order_by("spend", descending=[True], limit=5))
+
+    print(top_spenders.explain())                   # plan before/after rules
+    out = top_spenders.collect()
+    print("\ntop spenders:",
+          list(zip(out["user"], np.round(out["spend"], 1))))
 
     # 2) a real TPC-H query, distributed, data never leaves the device -----
-    q5 = queries.build_query(5, catalog)
+    q5 = queries.build_query(5, catalog)            # optimizer-planned tree
     res = session.execute(q5)
     print("\nTPC-H Q5 (revenue per nation):")
     for n, r in zip(res["n_name"], res["revenue"]):

@@ -4,10 +4,14 @@ Public API:
 
     from repro.core import dtypes, plan, expr
     from repro.core.session import Session, Catalog
+    from repro.core.builder import QueryBuilder, table
+    from repro.core.optimizer import optimize, explain
     from repro.core.exchange import ICIExchange, HostExchange
 """
 
 from . import dtypes, expr, plan  # noqa: F401
+from .builder import QueryBuilder, SchemaError, table  # noqa: F401
 from .exchange import HostExchange, ICIExchange  # noqa: F401
+from .optimizer import OptimizerConfig, explain, optimize  # noqa: F401
 from .session import Catalog, Session  # noqa: F401
 from .table import DeviceTable, concat_tables  # noqa: F401

@@ -84,7 +84,7 @@ def lexsort(keys: List[jax.Array], validity: jax.Array,
     order = jnp.arange(n, dtype=jnp.int32)
 
     def _passes(key, desc):
-        # yield 1-D sort passes, least significant first
+        # yield (column, descending) 1-D sort passes, least significant first
         if key.ndim == 2:   # fixed-width bytes: sort byte columns right-to-left
             cols = [key[:, j].astype(jnp.int32) for j in range(key.shape[1])]
             cols = list(reversed(cols))
@@ -93,9 +93,7 @@ def lexsort(keys: List[jax.Array], validity: jax.Array,
                 cols = [key]
             else:
                 cols = [key.astype(jnp.int32)]
-        if desc:
-            cols = [-c for c in cols]  # note: INT32_MIN is unsupported as a key
-        return cols
+        return [(c, desc) for c in cols]
 
     # stable multi-pass sort: apply passes least-significant first, so the
     # *last* applied pass is the most significant. keys[0] is primary ->
@@ -104,10 +102,19 @@ def lexsort(keys: List[jax.Array], validity: jax.Array,
     all_passes = []
     for key, desc in reversed(list(zip(keys, descending))):
         all_passes.extend(_passes(key, desc))
-    all_passes.append((~validity).astype(jnp.int32))
+    all_passes.append(((~validity).astype(jnp.int32), False))
 
-    for k in all_passes:  # least-significant first
-        perm = jnp.argsort(jnp.take(k, order), stable=True)
+    for k, desc in all_passes:  # least-significant first
+        cur = jnp.take(k, order)
+        if desc:
+            # Stable descending without negating values (negation corrupts
+            # INT32_MIN, which overflows back to itself, and loses the
+            # -0.0 < 0.0 total-order distinction on floats): stably argsort
+            # the reversed array and flip the result, which reverses the
+            # comparison while preserving original order among equal keys.
+            perm = (cur.shape[0] - 1 - jnp.argsort(cur[::-1], stable=True))[::-1]
+        else:
+            perm = jnp.argsort(cur, stable=True)
         order = jnp.take(order, perm)
     return order
 

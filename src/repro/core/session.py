@@ -24,6 +24,9 @@ from .table import DeviceTable
 class TableSource:
     name: str
     schema: dict
+    # catalog statistics for the optimizer: column sets that uniquely
+    # identify a row (primary/candidate keys), e.g. (("o_orderkey",),)
+    unique_keys: tuple = ()
 
     def scan(self, num_workers: int, columns, batch_rows: int,
              filter_expr=None) -> Iterator[DeviceTable]:
@@ -36,11 +39,13 @@ class TableSource:
 class InMemoryTable(TableSource):
     """Numpy-backed table; rows are range-partitioned across workers."""
 
-    def __init__(self, name: str, data: Dict[str, np.ndarray], schema: dict):
+    def __init__(self, name: str, data: Dict[str, np.ndarray], schema: dict,
+                 unique_keys: tuple = ()):
         self.name = name
         self.data = {k: np.asarray(v, dtype=schema[k].np_dtype())
                      for k, v in data.items()}
         self.schema = dict(schema)
+        self.unique_keys = tuple(tuple(u) for u in unique_keys)
         self._n = len(next(iter(self.data.values()))) if self.data else 0
 
     def num_rows(self) -> int:
@@ -84,8 +89,9 @@ class Catalog:
     def register(self, source: TableSource):
         self._tables[source.name] = source
 
-    def register_numpy(self, name: str, data: Dict[str, np.ndarray], schema):
-        self.register(InMemoryTable(name, data, schema))
+    def register_numpy(self, name: str, data: Dict[str, np.ndarray], schema,
+                       unique_keys: tuple = ()):
+        self.register(InMemoryTable(name, data, schema, unique_keys))
 
     def get(self, name: str) -> TableSource:
         return self._tables[name]
@@ -117,3 +123,20 @@ class Session:
         driver = Driver(self.context())
         self.last_driver = driver
         return driver.collect(plan)
+
+    # -- fluent frontend + planner entry points -----------------------------
+    def table(self, name: str, columns=None):
+        """Start a fluent query on a catalog table; ``.collect()`` runs it
+        through the logical optimizer and this session's driver."""
+        from .builder import QueryBuilder
+        return QueryBuilder.scan(self.catalog, name, columns, session=self)
+
+    def optimize(self, plan: PlanNode) -> PlanNode:
+        """Run the rule-based logical optimizer over a plan tree."""
+        from .optimizer import optimize
+        return optimize(plan, self.catalog)
+
+    def explain(self, plan: PlanNode) -> str:
+        """Pretty-print a plan before and after optimization."""
+        from .optimizer import explain_before_after
+        return explain_before_after(plan, self.catalog)

@@ -229,7 +229,8 @@ def load_catalog(sf: float = 0.01, seed: int = 19940729) -> Catalog:
     data = generate(sf, seed)
     cat = Catalog()
     for name, tab in data.items():
-        cat.register(InMemoryTable(name, tab, S.SCHEMAS[name]))
+        cat.register(InMemoryTable(name, tab, S.SCHEMAS[name],
+                                   unique_keys=(S.PRIMARY_KEYS[name],)))
     return cat
 
 
@@ -248,5 +249,7 @@ def write_dataset(root: str, sf: float = 0.01, seed: int = 19940729,
 def storage_catalog(root: str, skip_with_stats: bool = False) -> Catalog:
     cat = Catalog()
     for name in S.SCHEMAS:
-        cat.register(ColumnChunkTable(root, name, skip_with_stats))
+        src = ColumnChunkTable(root, name, skip_with_stats)
+        src.unique_keys = (S.PRIMARY_KEYS[name],)
+        cat.register(src)
     return cat

@@ -1,37 +1,31 @@
-"""All 22 TPC-H query plans in the engine's DSL (paper §3.4 runs all 22).
+"""All 22 TPC-H queries (paper §3.4 runs all 22).
 
-Correlated/EXISTS subqueries are rewritten into joins/aggregations the way
-Presto's planner does (semi/anti joins, scalar broadcasts, count-distinct
-via dedup). ``max_groups``/``max_matches`` are the planner's capacity hints
-(derived from catalog row counts, like a stats-backed optimizer).
+Queries describe *logical* plans only: no capacity hints, no distribution
+choices. ``build_query`` runs every plan through the rule-based logical
+optimizer (``repro.core.optimizer``), which pushes predicates into scans,
+prunes unreferenced columns, picks join distributions, and derives the
+static-shape capacity hints (``max_groups``/``max_matches``) from catalog
+statistics -- the planner work the hand-threaded ``Sizes`` helper used to
+approximate.
 
-Every query is validated against the pure-numpy oracle in oracle.py.
+Q1, Q3, Q5, Q6, Q10 and Q14 are written in the fluent builder API
+(``repro.core.builder``); the remaining queries are hand-assembled
+``PlanNode`` trees (correlated/EXISTS subqueries rewritten into joins the
+way Presto's planner does). Every query is validated against the
+pure-numpy oracle in oracle.py.
 """
 
 from __future__ import annotations
 
-import math
 from typing import Callable, Dict
 
 from ..core import plan as P
+from ..core.builder import table as _t
 from ..core.expr import col, date_lit, lit, prefix_code, year
+from ..core.optimizer import optimize
 from . import schema as S
 
 _D = date_lit
-
-
-def _pow2(n: int) -> int:
-    return max(int(2 ** math.ceil(math.log2(max(n, 2)))), 2)
-
-
-class Sizes:
-    """Planner statistics: row counts per table -> capacity hints."""
-
-    def __init__(self, catalog):
-        self.n = {t: catalog.get(t).num_rows() for t in S.SCHEMAS}
-
-    def groups(self, table: str, frac: float = 1.0) -> int:
-        return _pow2(int(self.n[table] * frac) + 8)
 
 
 def _dict_code(schema_col, value: str) -> int:
@@ -48,39 +42,29 @@ def _region(name: str) -> int:
 
 # ---------------------------------------------------------------------------
 
-def q1(sz: Sizes) -> P.PlanNode:
+def q1(catalog) -> P.PlanNode:
     disc_price = col("l_extendedprice") * (lit(1.0) - col("l_discount"))
     charge = disc_price * (lit(1.0) + col("l_tax"))
-    return P.OrderBy(
-        P.Aggregation(
-            P.Project(
-                P.TableScan("lineitem",
-                            columns=["l_returnflag", "l_linestatus",
-                                     "l_quantity", "l_extendedprice",
-                                     "l_discount", "l_tax", "l_shipdate"],
-                            filter=col("l_shipdate") <= lit(
-                                _D("1998-12-01").value - 90)),
-                [("l_returnflag", col("l_returnflag")),
-                 ("l_linestatus", col("l_linestatus")),
-                 ("l_quantity", col("l_quantity")),
-                 ("l_extendedprice", col("l_extendedprice")),
-                 ("disc_price", disc_price),
-                 ("charge", charge),
-                 ("l_discount", col("l_discount"))]),
-            group_keys=["l_returnflag", "l_linestatus"],
-            aggs=[("sum_qty", "sum", "l_quantity"),
-                  ("sum_base_price", "sum", "l_extendedprice"),
-                  ("sum_disc_price", "sum", "disc_price"),
-                  ("sum_charge", "sum", "charge"),
-                  ("avg_qty", "avg", "l_quantity"),
-                  ("avg_price", "avg", "l_extendedprice"),
-                  ("avg_disc", "avg", "l_discount"),
-                  ("count_order", "count", None)],
-            max_groups=8),
-        keys=["l_returnflag", "l_linestatus"])
+    return (
+        _t(catalog, "lineitem")
+        .filter(col("l_shipdate") <= lit(_D("1998-12-01").value - 90))
+        .project("l_returnflag", "l_linestatus", "l_quantity",
+                 "l_extendedprice", "l_discount",
+                 disc_price=disc_price, charge=charge)
+        .group_by("l_returnflag", "l_linestatus")
+        .agg(sum_qty=("sum", "l_quantity"),
+             sum_base_price=("sum", "l_extendedprice"),
+             sum_disc_price=("sum", "disc_price"),
+             sum_charge=("sum", "charge"),
+             avg_qty=("avg", "l_quantity"),
+             avg_price=("avg", "l_extendedprice"),
+             avg_disc=("avg", "l_discount"),
+             count_order=("count", None))
+        .order_by("l_returnflag", "l_linestatus")
+        .to_plan())
 
 
-def q2(sz: Sizes) -> P.PlanNode:
+def q2(catalog) -> P.PlanNode:
     eu_nation = P.Join(
         probe=P.TableScan("nation"),
         build=P.Filter(P.TableScan("region"),
@@ -93,21 +77,19 @@ def q2(sz: Sizes) -> P.PlanNode:
         probe_keys=["s_nationkey"], build_keys=["n_nationkey"],
         build_payload=["n_name"])
     ps_eu = P.Join(
-        probe=P.TableScan("partsupp",
-                          columns=["ps_partkey", "ps_suppkey", "ps_supplycost"]),
+        probe=P.TableScan("partsupp"),
         build=eu_supp,
         probe_keys=["ps_suppkey"], build_keys=["s_suppkey"],
         build_payload=["s_acctbal", "s_name", "s_address", "s_phone",
                        "s_comment", "n_name"])
     parts_f = P.Filter(
-        P.TableScan("part", columns=["p_partkey", "p_mfgr", "p_size", "p_type"]),
+        P.TableScan("part"),
         (col("p_size") == lit(15)) & _type_endswith_brass())
     joined = P.Join(probe=ps_eu, build=parts_f,
                     probe_keys=["ps_partkey"], build_keys=["p_partkey"],
                     build_payload=["p_mfgr"])
     min_cost = P.Aggregation(joined, ["ps_partkey"],
-                             [("min_cost", "min", "ps_supplycost")],
-                             max_groups=sz.groups("part"))
+                             [("min_cost", "min", "ps_supplycost")])
     final = P.Filter(
         P.Join(probe=joined, build=min_cost,
                probe_keys=["ps_partkey"], build_keys=["ps_partkey"],
@@ -133,136 +115,101 @@ def _type_endswith_brass():
     return col("p_type").isin(codes)
 
 
-def q3(sz: Sizes) -> P.PlanNode:
-    cust = P.Filter(P.TableScan("customer", columns=["c_custkey", "c_mktsegment"]),
-                    col("c_mktsegment") == lit(_dict_code(
-                        S.CUSTOMER["c_mktsegment"], "BUILDING")))
-    orders = P.Join(
-        probe=P.Filter(P.TableScan("orders",
-                                   columns=["o_orderkey", "o_custkey",
-                                            "o_orderdate", "o_shippriority"]),
-                       col("o_orderdate") < _D("1995-03-15")),
-        build=cust, probe_keys=["o_custkey"], build_keys=["c_custkey"],
-        join_type="left_semi")
-    li = P.Join(
-        probe=P.Filter(P.TableScan("lineitem",
-                                   columns=["l_orderkey", "l_extendedprice",
-                                            "l_discount", "l_shipdate"]),
-                       col("l_shipdate") > _D("1995-03-15")),
-        build=orders, probe_keys=["l_orderkey"], build_keys=["o_orderkey"],
-        build_payload=["o_orderdate", "o_shippriority"])
-    return P.OrderBy(
-        P.Aggregation(
-            P.Project(li, [("l_orderkey", col("l_orderkey")),
-                           ("o_orderdate", col("o_orderdate")),
-                           ("o_shippriority", col("o_shippriority")),
-                           ("rev", col("l_extendedprice")
-                            * (lit(1.0) - col("l_discount")))]),
-            group_keys=["l_orderkey"],
-            aggs=[("revenue", "sum", "rev"),
-                  ("o_orderdate", "first", "o_orderdate"),
-                  ("o_shippriority", "first", "o_shippriority")],
-            max_groups=sz.groups("orders")),
-        keys=["revenue", "o_orderdate"], descending=[True, False], limit=10)
+def q3(catalog) -> P.PlanNode:
+    cust = (_t(catalog, "customer")
+            .filter(col("c_mktsegment") == lit(_dict_code(
+                S.CUSTOMER["c_mktsegment"], "BUILDING"))))
+    orders = (_t(catalog, "orders")
+              .filter(col("o_orderdate") < _D("1995-03-15"))
+              .semi_join(cust, ["o_custkey"], ["c_custkey"]))
+    return (
+        _t(catalog, "lineitem")
+        .filter(col("l_shipdate") > _D("1995-03-15"))
+        .join(orders, ["l_orderkey"], ["o_orderkey"],
+              payload=["o_orderdate", "o_shippriority"])
+        .project("l_orderkey", "o_orderdate", "o_shippriority",
+                 rev=col("l_extendedprice") * (lit(1.0) - col("l_discount")))
+        .group_by("l_orderkey")
+        .agg(revenue=("sum", "rev"),
+             o_orderdate=("first", "o_orderdate"),
+             o_shippriority=("first", "o_shippriority"))
+        .order_by("revenue", "o_orderdate", descending=[True, False], limit=10)
+        .to_plan())
 
 
-def q4(sz: Sizes) -> P.PlanNode:
-    late = P.Filter(P.TableScan("lineitem",
-                                columns=["l_orderkey", "l_commitdate",
-                                         "l_receiptdate"]),
+def q4(catalog) -> P.PlanNode:
+    late = P.Filter(P.TableScan("lineitem"),
                     col("l_commitdate") < col("l_receiptdate"))
-    orders = P.Filter(P.TableScan("orders",
-                                  columns=["o_orderkey", "o_orderdate",
-                                           "o_orderpriority"]),
+    orders = P.Filter(P.TableScan("orders"),
                       col("o_orderdate").between(_D("1993-07-01"),
                                                  lit(_D("1993-10-01").value - 1)))
     semi = P.Join(probe=orders, build=late, probe_keys=["o_orderkey"],
                   build_keys=["l_orderkey"], join_type="left_semi")
     return P.OrderBy(
         P.Aggregation(semi, ["o_orderpriority"],
-                      [("order_count", "count", None)], max_groups=8),
+                      [("order_count", "count", None)]),
         keys=["o_orderpriority"])
 
 
-def q5(sz: Sizes) -> P.PlanNode:
-    asia_nation = P.Join(
-        probe=P.TableScan("nation"),
-        build=P.Filter(P.TableScan("region"),
-                       col("r_name") == lit(_region("ASIA"))),
-        probe_keys=["n_regionkey"], build_keys=["r_regionkey"],
-        join_type="left_semi")
-    supp = P.Join(probe=P.TableScan("supplier",
-                                    columns=["s_suppkey", "s_nationkey"]),
-                  build=asia_nation, probe_keys=["s_nationkey"],
-                  build_keys=["n_nationkey"], build_payload=["n_name"])
-    orders = P.Join(
-        probe=P.Filter(P.TableScan("orders",
-                                   columns=["o_orderkey", "o_custkey",
-                                            "o_orderdate"]),
-                       col("o_orderdate").between(_D("1994-01-01"),
-                                                  lit(_D("1995-01-01").value - 1))),
-        build=P.TableScan("customer", columns=["c_custkey", "c_nationkey"]),
-        probe_keys=["o_custkey"], build_keys=["c_custkey"],
-        build_payload=["c_nationkey"])
-    li = P.Join(
-        probe=P.TableScan("lineitem",
-                          columns=["l_orderkey", "l_suppkey",
-                                   "l_extendedprice", "l_discount"]),
-        build=orders, probe_keys=["l_orderkey"], build_keys=["o_orderkey"],
-        build_payload=["c_nationkey"])
-    li_s = P.Join(probe=li, build=supp, probe_keys=["l_suppkey"],
-                  build_keys=["s_suppkey"],
-                  build_payload=["s_nationkey", "n_name"])
-    matched = P.Filter(li_s, col("c_nationkey") == col("s_nationkey"))
-    return P.OrderBy(
-        P.Aggregation(
-            P.Project(matched, [("n_name", col("n_name")),
-                                ("rev", col("l_extendedprice")
-                                 * (lit(1.0) - col("l_discount")))]),
-            group_keys=["n_name"], aggs=[("revenue", "sum", "rev")],
-            max_groups=32),
-        keys=["revenue"], descending=[True])
+def q5(catalog) -> P.PlanNode:
+    asia_nation = (_t(catalog, "nation")
+                   .semi_join(_t(catalog, "region")
+                              .filter(col("r_name") == lit(_region("ASIA"))),
+                              ["n_regionkey"], ["r_regionkey"]))
+    supp = (_t(catalog, "supplier")
+            .join(asia_nation, ["s_nationkey"], ["n_nationkey"],
+                  payload=["n_name"]))
+    orders = (_t(catalog, "orders")
+              .filter(col("o_orderdate").between(
+                  _D("1994-01-01"), lit(_D("1995-01-01").value - 1)))
+              .join(_t(catalog, "customer"), ["o_custkey"], ["c_custkey"],
+                    payload=["c_nationkey"]))
+    return (
+        _t(catalog, "lineitem")
+        .join(orders, ["l_orderkey"], ["o_orderkey"], payload=["c_nationkey"])
+        .join(supp, ["l_suppkey"], ["s_suppkey"],
+              payload=["s_nationkey", "n_name"])
+        .filter(col("c_nationkey") == col("s_nationkey"))
+        .project("n_name",
+                 rev=col("l_extendedprice") * (lit(1.0) - col("l_discount")))
+        .group_by("n_name")
+        .agg(revenue=("sum", "rev"))
+        .order_by("revenue", descending=[True])
+        .to_plan())
 
 
-def q6(sz: Sizes) -> P.PlanNode:
-    f = (col("l_shipdate").between(_D("1994-01-01"),
-                                   lit(_D("1995-01-01").value - 1))
-         & col("l_discount").between(0.05, 0.07)
-         & (col("l_quantity") < 24.0))
-    return P.Aggregation(
-        P.Project(
-            P.TableScan("lineitem",
-                        columns=["l_shipdate", "l_discount", "l_quantity",
-                                 "l_extendedprice"], filter=f),
-            [("v", col("l_extendedprice") * col("l_discount"))]),
-        group_keys=[], aggs=[("revenue", "sum", "v")], max_groups=1)
+def q6(catalog) -> P.PlanNode:
+    return (
+        _t(catalog, "lineitem")
+        .filter(col("l_shipdate").between(_D("1994-01-01"),
+                                          lit(_D("1995-01-01").value - 1))
+                & col("l_discount").between(0.05, 0.07)
+                & (col("l_quantity") < 24.0))
+        .project(v=col("l_extendedprice") * col("l_discount"))
+        .agg(revenue=("sum", "v"))
+        .to_plan())
 
 
 def _q7_nations():
     return _nation("FRANCE"), _nation("GERMANY")
 
 
-def q7(sz: Sizes) -> P.PlanNode:
+def q7(catalog) -> P.PlanNode:
     fr, de = _q7_nations()
     npair = P.Filter(P.TableScan("nation"),
                      col("n_nationkey").isin([fr, de]))
-    supp = P.Join(probe=P.TableScan("supplier",
-                                    columns=["s_suppkey", "s_nationkey"]),
+    supp = P.Join(probe=P.TableScan("supplier"),
                   build=npair, probe_keys=["s_nationkey"],
                   build_keys=["n_nationkey"], build_payload=["n_name"])
-    cust = P.Join(probe=P.TableScan("customer",
-                                    columns=["c_custkey", "c_nationkey"]),
+    cust = P.Join(probe=P.TableScan("customer"),
                   build=npair, probe_keys=["c_nationkey"],
                   build_keys=["n_nationkey"], build_payload=["n_name"])
     cust = P.Project(cust, [("c_custkey", col("c_custkey")),
                             ("cust_nation", col("n_name"))])
-    orders = P.Join(probe=P.TableScan("orders",
-                                      columns=["o_orderkey", "o_custkey"]),
+    orders = P.Join(probe=P.TableScan("orders"),
                     build=cust, probe_keys=["o_custkey"],
                     build_keys=["c_custkey"], build_payload=["cust_nation"])
-    li = P.Filter(P.TableScan("lineitem",
-                              columns=["l_orderkey", "l_suppkey", "l_shipdate",
-                                       "l_extendedprice", "l_discount"]),
+    li = P.Filter(P.TableScan("lineitem"),
                   col("l_shipdate").between(_D("1995-01-01"), _D("1996-12-31")))
     li_s = P.Join(probe=li, build=supp, probe_keys=["l_suppkey"],
                   build_keys=["s_suppkey"], build_payload=["n_name"])
@@ -285,17 +232,16 @@ def q7(sz: Sizes) -> P.PlanNode:
                                 ("volume", col("l_extendedprice")
                                  * (lit(1.0) - col("l_discount")))]),
             group_keys=["supp_nation", "cust_nation", "l_year"],
-            aggs=[("revenue", "sum", "volume")], max_groups=16),
+            aggs=[("revenue", "sum", "volume")]),
         keys=["supp_nation", "cust_nation", "l_year"])
 
 
-def q8(sz: Sizes) -> P.PlanNode:
+def q8(catalog) -> P.PlanNode:
     target_type = _dict_code(S.PART["p_type"], "ECONOMY ANODIZED STEEL")
     brazil = _nation("BRAZIL")
-    part_f = P.Filter(P.TableScan("part", columns=["p_partkey", "p_type"]),
-                      col("p_type") == lit(target_type))
+    part_f = P.Filter(P.TableScan("part"), col("p_type") == lit(target_type))
     am_cust = P.Join(
-        probe=P.TableScan("customer", columns=["c_custkey", "c_nationkey"]),
+        probe=P.TableScan("customer"),
         build=P.Join(probe=P.TableScan("nation"),
                      build=P.Filter(P.TableScan("region"),
                                     col("r_name") == lit(_region("AMERICA"))),
@@ -304,24 +250,19 @@ def q8(sz: Sizes) -> P.PlanNode:
         probe_keys=["c_nationkey"], build_keys=["n_nationkey"],
         join_type="left_semi")
     orders = P.Join(
-        probe=P.Filter(P.TableScan("orders",
-                                   columns=["o_orderkey", "o_custkey",
-                                            "o_orderdate"]),
+        probe=P.Filter(P.TableScan("orders"),
                        col("o_orderdate").between(_D("1995-01-01"),
                                                   _D("1996-12-31"))),
         build=am_cust, probe_keys=["o_custkey"], build_keys=["c_custkey"],
         join_type="left_semi")
     li = P.Join(
-        probe=P.TableScan("lineitem",
-                          columns=["l_orderkey", "l_partkey", "l_suppkey",
-                                   "l_extendedprice", "l_discount"]),
+        probe=P.TableScan("lineitem"),
         build=part_f, probe_keys=["l_partkey"], build_keys=["p_partkey"],
         join_type="left_semi")
     li_o = P.Join(probe=li, build=orders, probe_keys=["l_orderkey"],
                   build_keys=["o_orderkey"], build_payload=["o_orderdate"])
     li_os = P.Join(probe=li_o,
-                   build=P.TableScan("supplier",
-                                     columns=["s_suppkey", "s_nationkey"]),
+                   build=P.TableScan("supplier"),
                    probe_keys=["l_suppkey"], build_keys=["s_suppkey"],
                    build_payload=["s_nationkey"])
     vols = P.Project(li_os, [
@@ -334,36 +275,32 @@ def q8(sz: Sizes) -> P.PlanNode:
         ("brazil_volume", col("volume") * col("is_brazil"))])
     agg = P.Aggregation(vols, ["o_year"],
                         [("nat", "sum", "brazil_volume"),
-                         ("total", "sum", "volume")], max_groups=4)
+                         ("total", "sum", "volume")])
     return P.OrderBy(
         P.Project(agg, [("o_year", col("o_year")),
                         ("mkt_share", col("nat") / col("total"))]),
         keys=["o_year"])
 
 
-def q9(sz: Sizes) -> P.PlanNode:
-    part_f = P.Filter(P.TableScan("part", columns=["p_partkey", "p_name"]),
-                      col("p_name").contains("green"))
-    li = P.Join(probe=P.TableScan("lineitem",
-                                  columns=["l_orderkey", "l_partkey",
-                                           "l_suppkey", "l_quantity",
-                                           "l_extendedprice", "l_discount"]),
+def q9(catalog) -> P.PlanNode:
+    part_f = P.Filter(P.TableScan("part"), col("p_name").contains("green"))
+    li = P.Join(probe=P.TableScan("lineitem"),
                 build=part_f, probe_keys=["l_partkey"],
                 build_keys=["p_partkey"], join_type="left_semi")
     li_s = P.Join(probe=li,
-                  build=P.TableScan("supplier",
-                                    columns=["s_suppkey", "s_nationkey"]),
+                  build=P.TableScan("supplier"),
                   probe_keys=["l_suppkey"], build_keys=["s_suppkey"],
                   build_payload=["s_nationkey"])
+    # hashed composite key: collision headroom even without catalog key
+    # stats (the optimizer re-derives this when stats are declared)
     li_ps = P.Join(probe=li_s,
                    build=P.TableScan("partsupp"),
                    probe_keys=["l_partkey", "l_suppkey"],
                    build_keys=["ps_partkey", "ps_suppkey"],
                    build_payload=["ps_supplycost"],
-                   max_matches=4)   # hashed composite key: collision headroom
+                   max_matches=4)
     li_o = P.Join(probe=li_ps,
-                  build=P.TableScan("orders",
-                                    columns=["o_orderkey", "o_orderdate"]),
+                  build=P.TableScan("orders"),
                   probe_keys=["l_orderkey"], build_keys=["o_orderkey"],
                   build_payload=["o_orderdate"])
     li_n = P.Join(probe=li_o, build=P.TableScan("nation"),
@@ -377,53 +314,40 @@ def q9(sz: Sizes) -> P.PlanNode:
                              ("o_year", year(col("o_orderdate"))),
                              ("amount", amount)]),
             group_keys=["nation", "o_year"],
-            aggs=[("sum_profit", "sum", "amount")], max_groups=256),
+            aggs=[("sum_profit", "sum", "amount")]),
         keys=["nation", "o_year"], descending=[False, True])
 
 
-def q10(sz: Sizes) -> P.PlanNode:
-    orders = P.Filter(P.TableScan("orders",
-                                  columns=["o_orderkey", "o_custkey",
-                                           "o_orderdate"]),
-                      col("o_orderdate").between(_D("1993-10-01"),
-                                                 lit(_D("1994-01-01").value - 1)))
-    li = P.Join(
-        probe=P.Filter(P.TableScan("lineitem",
-                                   columns=["l_orderkey", "l_returnflag",
-                                            "l_extendedprice", "l_discount"]),
-                       col("l_returnflag") == lit(_dict_code(
-                           S.LINEITEM["l_returnflag"], "R"))),
-        build=orders, probe_keys=["l_orderkey"], build_keys=["o_orderkey"],
-        build_payload=["o_custkey"])
-    rev = P.Aggregation(
-        P.Project(li, [("o_custkey", col("o_custkey")),
-                       ("rev", col("l_extendedprice")
-                        * (lit(1.0) - col("l_discount")))]),
-        group_keys=["o_custkey"], aggs=[("revenue", "sum", "rev")],
-        max_groups=sz.groups("customer"))
-    cust = P.Join(probe=P.TableScan("customer"), build=rev,
-                  probe_keys=["c_custkey"], build_keys=["o_custkey"],
-                  build_payload=["revenue"])
-    cust_n = P.Join(probe=cust, build=P.TableScan("nation"),
-                    probe_keys=["c_nationkey"], build_keys=["n_nationkey"],
-                    build_payload=["n_name"])
-    return P.OrderBy(
-        P.Project(cust_n, [("c_custkey", col("c_custkey")),
-                           ("c_name", col("c_name")),
-                           ("revenue", col("revenue")),
-                           ("c_acctbal", col("c_acctbal")),
-                           ("n_name", col("n_name")),
-                           ("c_address", col("c_address")),
-                           ("c_phone", col("c_phone")),
-                           ("c_comment", col("c_comment"))]),
-        keys=["revenue"], descending=[True], limit=20)
+def q10(catalog) -> P.PlanNode:
+    orders = (_t(catalog, "orders")
+              .filter(col("o_orderdate").between(
+                  _D("1993-10-01"), lit(_D("1994-01-01").value - 1))))
+    rev = (_t(catalog, "lineitem")
+           .filter(col("l_returnflag") == lit(_dict_code(
+               S.LINEITEM["l_returnflag"], "R")))
+           .join(orders, ["l_orderkey"], ["o_orderkey"],
+                 payload=["o_custkey"])
+           .project("o_custkey",
+                    rev=col("l_extendedprice") * (lit(1.0) - col("l_discount")))
+           .group_by("o_custkey")
+           .agg(revenue=("sum", "rev")))
+    return (
+        _t(catalog, "customer")
+        .join(rev, ["c_custkey"], ["o_custkey"], payload=["revenue"])
+        .join(_t(catalog, "nation"), ["c_nationkey"], ["n_nationkey"],
+              payload=["n_name"])
+        .project("c_custkey", "c_name", "revenue", "c_acctbal", "n_name",
+                 "c_address", "c_phone", "c_comment")
+        .order_by("revenue", descending=[True], limit=20)
+        .to_plan())
 
 
-def q11(sz: Sizes, fraction: float = None) -> P.PlanNode:
+def q11(catalog, fraction: float = None) -> P.PlanNode:
     if fraction is None:
-        fraction = 0.0001 / max(sz.n["supplier"] / 10000.0, 1e-9)
+        n_supp = catalog.get("supplier").num_rows()
+        fraction = 0.0001 / max(n_supp / 10000.0, 1e-9)
     de_supp = P.Join(
-        probe=P.TableScan("supplier", columns=["s_suppkey", "s_nationkey"]),
+        probe=P.TableScan("supplier"),
         build=P.Filter(P.TableScan("nation"),
                        col("n_name") == lit(_nation("GERMANY"))),
         probe_keys=["s_nationkey"], build_keys=["n_nationkey"],
@@ -433,10 +357,9 @@ def q11(sz: Sizes, fraction: float = None) -> P.PlanNode:
                 join_type="left_semi")
     ps = P.Project(ps, [("ps_partkey", col("ps_partkey")),
                         ("value", col("ps_supplycost") * col("ps_availqty"))])
-    per_part = P.Aggregation(ps, ["ps_partkey"], [("value", "sum", "value")],
-                             max_groups=sz.groups("part"))
+    per_part = P.Aggregation(ps, ["ps_partkey"], [("value", "sum", "value")])
     total = P.Aggregation(P.Project(per_part, [("tval", col("value"))]),
-                          [], [("total", "sum", "tval")], max_groups=1)
+                          [], [("total", "sum", "tval")])
     filtered = P.Filter(
         P.ScalarBroadcast(per_part, total, ["total"]),
         col("value") > col("total") * lit(float(fraction)))
@@ -445,23 +368,20 @@ def q11(sz: Sizes, fraction: float = None) -> P.PlanNode:
                      keys=["value"], descending=[True])
 
 
-def q12(sz: Sizes) -> P.PlanNode:
+def q12(catalog) -> P.PlanNode:
     mail = _dict_code(S.LINEITEM["l_shipmode"], "MAIL")
     ship = _dict_code(S.LINEITEM["l_shipmode"], "SHIP")
     urgent = _dict_code(S.ORDERS["o_orderpriority"], "1-URGENT")
     high = _dict_code(S.ORDERS["o_orderpriority"], "2-HIGH")
     li = P.Filter(
-        P.TableScan("lineitem", columns=["l_orderkey", "l_shipmode",
-                                         "l_shipdate", "l_commitdate",
-                                         "l_receiptdate"]),
+        P.TableScan("lineitem"),
         col("l_shipmode").isin([mail, ship])
         & (col("l_commitdate") < col("l_receiptdate"))
         & (col("l_shipdate") < col("l_commitdate"))
         & col("l_receiptdate").between(_D("1994-01-01"),
                                        lit(_D("1995-01-01").value - 1)))
     li_o = P.Join(probe=li,
-                  build=P.TableScan("orders",
-                                    columns=["o_orderkey", "o_orderpriority"]),
+                  build=P.TableScan("orders"),
                   probe_keys=["l_orderkey"], build_keys=["o_orderkey"],
                   build_payload=["o_orderpriority"])
     flagged = P.Project(li_o, [
@@ -475,149 +395,133 @@ def q12(sz: Sizes) -> P.PlanNode:
     return P.OrderBy(
         P.Aggregation(flagged, ["l_shipmode"],
                       [("high_line_count", "sum", "high"),
-                       ("low_line_count", "sum", "low")], max_groups=8),
+                       ("low_line_count", "sum", "low")]),
         keys=["l_shipmode"])
 
 
-def q13(sz: Sizes) -> P.PlanNode:
-    orders = P.Filter(P.TableScan("orders", columns=["o_orderkey", "o_custkey",
-                                                     "o_comment"]),
+def q13(catalog) -> P.PlanNode:
+    orders = P.Filter(P.TableScan("orders"),
                       ~col("o_comment").contains("special", "requests"))
     per_cust = P.Aggregation(orders, ["o_custkey"],
-                             [("c_count", "count", None)],
-                             max_groups=sz.groups("customer"))
-    cust = P.Join(probe=P.TableScan("customer", columns=["c_custkey"]),
-                  build=per_cust, probe_keys=["c_custkey"],
+                             [("c_count", "count", None)])
+    cust = P.Join(probe=P.TableScan("customer"), build=per_cust,
+                  probe_keys=["c_custkey"],
                   build_keys=["o_custkey"], build_payload=["c_count"],
                   join_type="left_outer")
     cust = P.Project(cust, [("c_count", col("c_count") * col("__matched"))])
     return P.OrderBy(
-        P.Aggregation(cust, ["c_count"], [("custdist", "count", None)],
-                      max_groups=64),
+        P.Aggregation(cust, ["c_count"], [("custdist", "count", None)]),
         keys=["custdist", "c_count"], descending=[True, True])
 
 
-def q14(sz: Sizes) -> P.PlanNode:
+def q14(catalog) -> P.PlanNode:
     promo_codes = [i for i, t in enumerate(S.TYPES) if t.startswith("PROMO")]
-    li = P.Filter(P.TableScan("lineitem",
-                              columns=["l_partkey", "l_shipdate",
-                                       "l_extendedprice", "l_discount"]),
-                  col("l_shipdate").between(_D("1995-09-01"),
-                                            lit(_D("1995-10-01").value - 1)))
-    li_p = P.Join(probe=li, build=P.TableScan("part",
-                                              columns=["p_partkey", "p_type"]),
-                  probe_keys=["l_partkey"], build_keys=["p_partkey"],
-                  build_payload=["p_type"])
-    flagged = P.Project(li_p, [
-        ("rev", col("l_extendedprice") * (lit(1.0) - col("l_discount"))),
-        ("is_promo", col("p_type").isin(promo_codes))])
-    flagged = P.Project(flagged, [
-        ("rev", col("rev")),
-        ("promo_rev", col("rev") * col("is_promo"))])
-    agg = P.Aggregation(flagged, [], [("promo", "sum", "promo_rev"),
-                                      ("total", "sum", "rev")], max_groups=1)
-    return P.Project(agg, [("promo_revenue",
-                            lit(100.0) * col("promo") / col("total"))])
+    rev = col("l_extendedprice") * (lit(1.0) - col("l_discount"))
+    return (
+        _t(catalog, "lineitem")
+        .filter(col("l_shipdate").between(_D("1995-09-01"),
+                                          lit(_D("1995-10-01").value - 1)))
+        .join(_t(catalog, "part"), ["l_partkey"], ["p_partkey"],
+              payload=["p_type"])
+        .project(rev=rev, is_promo=col("p_type").isin(promo_codes))
+        .project("rev", promo_rev=col("rev") * col("is_promo"))
+        .agg(promo=("sum", "promo_rev"), total=("sum", "rev"))
+        .project(promo_revenue=lit(100.0) * col("promo") / col("total"))
+        .to_plan())
 
 
-def q15(sz: Sizes) -> P.PlanNode:
-    li = P.Filter(P.TableScan("lineitem",
-                              columns=["l_suppkey", "l_shipdate",
-                                       "l_extendedprice", "l_discount"]),
+def q15(catalog) -> P.PlanNode:
+    li = P.Filter(P.TableScan("lineitem"),
                   col("l_shipdate").between(_D("1996-01-01"),
                                             lit(_D("1996-04-01").value - 1)))
     rev = P.Aggregation(
         P.Project(li, [("l_suppkey", col("l_suppkey")),
                        ("rev", col("l_extendedprice")
                         * (lit(1.0) - col("l_discount")))]),
-        group_keys=["l_suppkey"], aggs=[("total_revenue", "sum", "rev")],
-        max_groups=sz.groups("supplier"))
+        group_keys=["l_suppkey"], aggs=[("total_revenue", "sum", "rev")])
     maxrev = P.Aggregation(P.Project(rev, [("r", col("total_revenue"))]),
-                           [], [("max_rev", "max", "r")], max_groups=1)
+                           [], [("max_rev", "max", "r")])
     best = P.Filter(P.ScalarBroadcast(rev, maxrev, ["max_rev"]),
                     col("total_revenue") == col("max_rev"))
-    supp = P.Join(probe=P.TableScan("supplier",
-                                    columns=["s_suppkey", "s_name",
-                                             "s_address", "s_phone"]),
+    supp = P.Join(probe=P.TableScan("supplier"),
                   build=best, probe_keys=["s_suppkey"],
                   build_keys=["l_suppkey"], build_payload=["total_revenue"])
-    return P.OrderBy(supp, keys=["s_suppkey"])
+    return P.OrderBy(
+        P.Project(supp, [("s_suppkey", col("s_suppkey")),
+                         ("s_name", col("s_name")),
+                         ("s_address", col("s_address")),
+                         ("s_phone", col("s_phone")),
+                         ("total_revenue", col("total_revenue"))]),
+        keys=["s_suppkey"])
 
 
-def q16(sz: Sizes) -> P.PlanNode:
+def q16(catalog) -> P.PlanNode:
     brand45 = _dict_code(S.PART["p_brand"], "Brand#45")
     med_pol = [i for i, t in enumerate(S.TYPES)
                if t.startswith("MEDIUM POLISHED")]
     sizes = [49, 14, 23, 45, 19, 3, 36, 9]
     part_f = P.Filter(
-        P.TableScan("part", columns=["p_partkey", "p_brand", "p_type",
-                                     "p_size"]),
+        P.TableScan("part"),
         (col("p_brand") != lit(brand45))
         & (~col("p_type").isin(med_pol))
         & col("p_size").isin(sizes))
-    ps = P.Join(probe=P.TableScan("partsupp",
-                                  columns=["ps_partkey", "ps_suppkey"]),
+    ps = P.Join(probe=P.TableScan("partsupp"),
                 build=part_f, probe_keys=["ps_partkey"],
                 build_keys=["p_partkey"],
                 build_payload=["p_brand", "p_type", "p_size"])
-    bad_supp = P.Filter(P.TableScan("supplier",
-                                    columns=["s_suppkey", "s_comment"]),
+    bad_supp = P.Filter(P.TableScan("supplier"),
                         col("s_comment").contains("Customer", "Complaints"))
     ps = P.Join(probe=ps, build=bad_supp, probe_keys=["ps_suppkey"],
                 build_keys=["s_suppkey"], join_type="left_anti")
-    dedup = P.Distinct(ps, ["p_brand", "p_type", "p_size", "ps_suppkey"],
-                       max_groups=sz.groups("partsupp"))
+    dedup = P.Distinct(ps, ["p_brand", "p_type", "p_size", "ps_suppkey"])
     return P.OrderBy(
         P.Aggregation(dedup, ["p_brand", "p_type", "p_size"],
-                      [("supplier_cnt", "count", None)],
-                      max_groups=sz.groups("part")),
+                      [("supplier_cnt", "count", None)]),
         keys=["supplier_cnt", "p_brand", "p_type", "p_size"],
         descending=[True, False, False, False])
 
 
-def q17(sz: Sizes) -> P.PlanNode:
+def q17(catalog) -> P.PlanNode:
     brand = _dict_code(S.PART["p_brand"], "Brand#23")
     box = _dict_code(S.PART["p_container"], "MED BOX")
-    part_f = P.Filter(P.TableScan("part", columns=["p_partkey", "p_brand",
-                                                   "p_container"]),
+    part_f = P.Filter(P.TableScan("part"),
                       (col("p_brand") == lit(brand))
                       & (col("p_container") == lit(box)))
-    li = P.Join(probe=P.TableScan("lineitem",
-                                  columns=["l_partkey", "l_quantity",
-                                           "l_extendedprice"]),
+    li = P.Join(probe=P.TableScan("lineitem"),
                 build=part_f, probe_keys=["l_partkey"],
                 build_keys=["p_partkey"], join_type="left_semi")
-    avg_q = P.Aggregation(li, ["l_partkey"], [("avg_qty", "avg", "l_quantity")],
-                          max_groups=sz.groups("part", 0.1))
+    avg_q = P.Aggregation(li, ["l_partkey"], [("avg_qty", "avg", "l_quantity")])
     joined = P.Join(probe=li, build=avg_q, probe_keys=["l_partkey"],
                     build_keys=["l_partkey"], build_payload=["avg_qty"])
     small = P.Filter(joined, col("l_quantity") < lit(0.2) * col("avg_qty"))
-    agg = P.Aggregation(small, [], [("s", "sum", "l_extendedprice")],
-                        max_groups=1)
+    agg = P.Aggregation(small, [], [("s", "sum", "l_extendedprice")])
     return P.Project(agg, [("avg_yearly", col("s") / lit(7.0))])
 
 
-def q18(sz: Sizes) -> P.PlanNode:
+def q18(catalog) -> P.PlanNode:
     per_order = P.Aggregation(
-        P.TableScan("lineitem", columns=["l_orderkey", "l_quantity"]),
-        ["l_orderkey"], [("sum_qty", "sum", "l_quantity")],
-        max_groups=sz.groups("orders"))
+        P.TableScan("lineitem"),
+        ["l_orderkey"], [("sum_qty", "sum", "l_quantity")])
     big = P.Filter(per_order, col("sum_qty") > lit(300.0))
-    orders = P.Join(probe=P.TableScan("orders",
-                                      columns=["o_orderkey", "o_custkey",
-                                               "o_orderdate", "o_totalprice"]),
+    orders = P.Join(probe=P.TableScan("orders"),
                     build=big, probe_keys=["o_orderkey"],
                     build_keys=["l_orderkey"], build_payload=["sum_qty"])
     cust = P.Join(probe=orders,
-                  build=P.TableScan("customer",
-                                    columns=["c_custkey", "c_name"]),
+                  build=P.TableScan("customer"),
                   probe_keys=["o_custkey"], build_keys=["c_custkey"],
                   build_payload=["c_name"])
-    return P.OrderBy(cust, keys=["o_totalprice", "o_orderdate"],
-                     descending=[True, False], limit=100)
+    return P.OrderBy(
+        P.Project(cust, [("o_orderkey", col("o_orderkey")),
+                         ("o_custkey", col("o_custkey")),
+                         ("o_orderdate", col("o_orderdate")),
+                         ("o_totalprice", col("o_totalprice")),
+                         ("sum_qty", col("sum_qty")),
+                         ("c_name", col("c_name"))]),
+        keys=["o_totalprice", "o_orderdate"],
+        descending=[True, False], limit=100)
 
 
-def q19(sz: Sizes) -> P.PlanNode:
+def q19(catalog) -> P.PlanNode:
     sm = S.LINEITEM["l_shipmode"]
     air, reg_air = _dict_code(sm, "AIR"), _dict_code(sm, "REG AIR")
     deliver = _dict_code(S.LINEITEM["l_shipinstruct"], "DELIVER IN PERSON")
@@ -631,16 +535,11 @@ def q19(sz: Sizes) -> P.PlanNode:
                       ("MED BAG", "MED BOX", "MED PKG", "MED PACK")]
     lg_containers = [_dict_code(cont, c) for c in
                      ("LG CASE", "LG BOX", "LG PACK", "LG PKG")]
-    li = P.Filter(P.TableScan("lineitem",
-                              columns=["l_partkey", "l_quantity",
-                                       "l_extendedprice", "l_discount",
-                                       "l_shipmode", "l_shipinstruct"]),
+    li = P.Filter(P.TableScan("lineitem"),
                   col("l_shipmode").isin([air, reg_air])
                   & (col("l_shipinstruct") == lit(deliver)))
     li_p = P.Join(probe=li,
-                  build=P.TableScan("part",
-                                    columns=["p_partkey", "p_brand", "p_size",
-                                             "p_container"]),
+                  build=P.TableScan("part"),
                   probe_keys=["l_partkey"], build_keys=["p_partkey"],
                   build_payload=["p_brand", "p_size", "p_container"])
     bracket1 = ((col("p_brand") == lit(b12))
@@ -659,37 +558,29 @@ def q19(sz: Sizes) -> P.PlanNode:
     return P.Aggregation(
         P.Project(matched, [("rev", col("l_extendedprice")
                              * (lit(1.0) - col("l_discount")))]),
-        group_keys=[], aggs=[("revenue", "sum", "rev")], max_groups=1)
+        group_keys=[], aggs=[("revenue", "sum", "rev")])
 
 
-def q20(sz: Sizes) -> P.PlanNode:
-    forest = P.Filter(P.TableScan("part", columns=["p_partkey", "p_name"]),
-                      col("p_name").startswith("forest"))
+def q20(catalog) -> P.PlanNode:
+    forest = P.Filter(P.TableScan("part"), col("p_name").startswith("forest"))
     qty94 = P.Aggregation(
-        P.Filter(P.TableScan("lineitem",
-                             columns=["l_partkey", "l_suppkey", "l_shipdate",
-                                      "l_quantity"]),
+        P.Filter(P.TableScan("lineitem"),
                  col("l_shipdate").between(_D("1994-01-01"),
                                            lit(_D("1995-01-01").value - 1))),
-        ["l_partkey", "l_suppkey"], [("qty", "sum", "l_quantity")],
-        max_groups=sz.groups("partsupp"))
-    ps = P.Join(probe=P.TableScan("partsupp",
-                                  columns=["ps_partkey", "ps_suppkey",
-                                           "ps_availqty"]),
+        ["l_partkey", "l_suppkey"], [("qty", "sum", "l_quantity")])
+    ps = P.Join(probe=P.TableScan("partsupp"),
                 build=forest, probe_keys=["ps_partkey"],
                 build_keys=["p_partkey"], join_type="left_semi")
+    # hashed composite key: collision headroom even without catalog key stats
     ps_q = P.Join(probe=ps, build=qty94,
                   probe_keys=["ps_partkey", "ps_suppkey"],
                   build_keys=["l_partkey", "l_suppkey"],
                   build_payload=["qty"],
-                  max_matches=4)   # hashed composite key: collision headroom
+                  max_matches=4)
     excess = P.Filter(ps_q, col("ps_availqty") > lit(0.5) * col("qty"))
-    supp_keys = P.Distinct(excess, ["ps_suppkey"],
-                           max_groups=sz.groups("supplier"))
+    supp_keys = P.Distinct(excess, ["ps_suppkey"])
     ca_supp = P.Join(
-        probe=P.Join(probe=P.TableScan("supplier",
-                                       columns=["s_suppkey", "s_name",
-                                                "s_address", "s_nationkey"]),
+        probe=P.Join(probe=P.TableScan("supplier"),
                      build=supp_keys, probe_keys=["s_suppkey"],
                      build_keys=["ps_suppkey"], join_type="left_semi"),
         build=P.Filter(P.TableScan("nation"),
@@ -701,29 +592,23 @@ def q20(sz: Sizes) -> P.PlanNode:
                      keys=["s_name"])
 
 
-def q21(sz: Sizes) -> P.PlanNode:
+def q21(catalog) -> P.PlanNode:
     li = P.TableScan("lineitem", columns=["l_orderkey", "l_suppkey",
                                           "l_commitdate", "l_receiptdate"])
     all_supp = P.Aggregation(
-        P.Distinct(li, ["l_orderkey", "l_suppkey"],
-                   max_groups=sz.groups("lineitem")),
-        ["l_orderkey"], [("nsupp", "count", None)],
-        max_groups=sz.groups("orders"))
+        P.Distinct(li, ["l_orderkey", "l_suppkey"]),
+        ["l_orderkey"], [("nsupp", "count", None)])
     late = P.Filter(li, col("l_receiptdate") > col("l_commitdate"))
     late_supp = P.Aggregation(
-        P.Distinct(late, ["l_orderkey", "l_suppkey"],
-                   max_groups=sz.groups("lineitem")),
-        ["l_orderkey"], [("nlate", "count", None)],
-        max_groups=sz.groups("orders"))
-    f_orders = P.Filter(P.TableScan("orders",
-                                    columns=["o_orderkey", "o_orderstatus"]),
+        P.Distinct(late, ["l_orderkey", "l_suppkey"]),
+        ["l_orderkey"], [("nlate", "count", None)])
+    f_orders = P.Filter(P.TableScan("orders"),
                         col("o_orderstatus") == lit(_dict_code(
                             S.ORDERS["o_orderstatus"], "F")))
     l1 = P.Join(probe=late, build=f_orders, probe_keys=["l_orderkey"],
                 build_keys=["o_orderkey"], join_type="left_semi")
     sa_supp = P.Join(
-        probe=P.TableScan("supplier", columns=["s_suppkey", "s_name",
-                                               "s_nationkey"]),
+        probe=P.TableScan("supplier"),
         build=P.Filter(P.TableScan("nation"),
                        col("n_name") == lit(_nation("SAUDI ARABIA"))),
         probe_keys=["s_nationkey"], build_keys=["n_nationkey"],
@@ -736,32 +621,29 @@ def q21(sz: Sizes) -> P.PlanNode:
                    build_keys=["l_orderkey"], build_payload=["nlate"])
     waiting = P.Filter(l1_cc, (col("nsupp") >= lit(2)) & (col("nlate") == lit(1)))
     return P.OrderBy(
-        P.Aggregation(waiting, ["s_name"], [("numwait", "count", None)],
-                      max_groups=sz.groups("supplier")),
+        P.Aggregation(waiting, ["s_name"], [("numwait", "count", None)]),
         keys=["numwait", "s_name"], descending=[True, False], limit=100)
 
 
-def q22(sz: Sizes) -> P.PlanNode:
+def q22(catalog) -> P.PlanNode:
     codes = [13, 31, 23, 29, 30, 18, 17]
-    cust = P.Project(P.TableScan("customer",
-                                 columns=["c_custkey", "c_phone", "c_acctbal"]),
+    cust = P.Project(P.TableScan("customer"),
                      [("c_custkey", col("c_custkey")),
                       ("cntrycode", prefix_code(col("c_phone"), 2)),
                       ("c_acctbal", col("c_acctbal"))])
     in_codes = P.Filter(cust, col("cntrycode").isin(codes))
     positive = P.Filter(in_codes, col("c_acctbal") > lit(0.0))
-    avg_bal = P.Aggregation(positive, [], [("avg_bal", "avg", "c_acctbal")],
-                            max_groups=1)
+    avg_bal = P.Aggregation(positive, [], [("avg_bal", "avg", "c_acctbal")])
     rich = P.Filter(P.ScalarBroadcast(in_codes, avg_bal, ["avg_bal"]),
                     col("c_acctbal") > col("avg_bal"))
     no_orders = P.Join(probe=rich,
-                       build=P.TableScan("orders", columns=["o_custkey"]),
+                       build=P.TableScan("orders"),
                        probe_keys=["c_custkey"], build_keys=["o_custkey"],
                        join_type="left_anti")
     return P.OrderBy(
         P.Aggregation(no_orders, ["cntrycode"],
                       [("numcust", "count", None),
-                       ("totacctbal", "sum", "c_acctbal")], max_groups=64),
+                       ("totacctbal", "sum", "c_acctbal")]),
         keys=["cntrycode"])
 
 
@@ -772,5 +654,8 @@ QUERIES: Dict[int, Callable] = {
 }
 
 
-def build_query(qnum: int, catalog) -> P.PlanNode:
-    return QUERIES[qnum](Sizes(catalog))
+def build_query(qnum: int, catalog, optimized: bool = True) -> P.PlanNode:
+    """Logical plan for query ``qnum``, run through the optimizer pipeline
+    (pass ``optimized=False`` for the raw tree)."""
+    plan = QUERIES[qnum](catalog)
+    return optimize(plan, catalog) if optimized else plan

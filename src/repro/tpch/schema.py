@@ -145,6 +145,19 @@ SCHEMAS = {
     "lineitem": LINEITEM,
 }
 
+# primary keys (catalog stats for the optimizer's capacity derivation:
+# joins against these columns provably match at most one build row)
+PRIMARY_KEYS = {
+    "region": ("r_regionkey",),
+    "nation": ("n_nationkey",),
+    "supplier": ("s_suppkey",),
+    "customer": ("c_custkey",),
+    "part": ("p_partkey",),
+    "partsupp": ("ps_partkey", "ps_suppkey"),
+    "orders": ("o_orderkey",),
+    "lineitem": ("l_orderkey", "l_linenumber"),
+}
+
 # base cardinalities at SF=1
 BASE_ROWS = {
     "region": 5,

@@ -1,0 +1,360 @@
+"""Builder schema validation + optimizer rule tests (tree-shape assertions).
+
+The oracle-parity of optimized TPC-H plans is covered by
+test_tpch_queries.py; here we assert on the *rewritten trees* -- predicate
+pushdown, projection pruning, join-distribution choice, capacity hints --
+and on the builder's fail-fast schema errors.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Session, SchemaError, dtypes as dt, plan as P
+from repro.core import optimizer as opt
+from repro.core.builder import table
+from repro.core.expr import col, lit
+from repro.tpch import dbgen, queries
+
+SF = 0.002
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return dbgen.load_catalog(sf=SF)
+
+
+@pytest.fixture(scope="module")
+def session(catalog):
+    return Session(catalog, num_workers=1, batch_rows=16384)
+
+
+# ---------------------------------------------------------------------------
+# builder: schema propagation + fail-fast validation
+# ---------------------------------------------------------------------------
+
+def test_builder_produces_plan_ir(catalog):
+    b = (table(catalog, "lineitem")
+         .filter(col("l_quantity") < 10.0)
+         .project("l_orderkey", v=col("l_extendedprice") * 2.0)
+         .group_by("l_orderkey")
+         .agg(total=("sum", "v"))
+         .order_by("total", descending=[True], limit=5))
+    plan = b.to_plan()
+    assert isinstance(plan, P.OrderBy) and plan.limit == 5
+    assert isinstance(plan.child, P.Aggregation)
+    assert plan.child.group_keys == ["l_orderkey"]
+    # schema propagated through every step
+    assert list(b.schema) == ["l_orderkey", "total"]
+    assert b.schema["total"].name == "float32"
+
+
+def test_builder_unknown_table(catalog):
+    with pytest.raises(SchemaError, match="unknown table"):
+        table(catalog, "lineitems")
+
+
+def test_builder_unknown_column_in_filter(catalog):
+    with pytest.raises(SchemaError, match="unknown column.*l_shipdat"):
+        table(catalog, "lineitem").filter(col("l_shipdat") < 10)
+
+
+def test_builder_unknown_column_in_project(catalog):
+    with pytest.raises(SchemaError, match="project"):
+        table(catalog, "orders").project("o_orderkey", x=col("nope") + 1)
+
+
+def test_builder_unknown_column_in_group_by_and_order_by(catalog):
+    with pytest.raises(SchemaError, match="group_by"):
+        table(catalog, "orders").group_by("nope")
+    with pytest.raises(SchemaError, match="order_by"):
+        table(catalog, "orders").order_by("nope")
+
+
+def test_builder_unknown_agg_column_and_kind(catalog):
+    t = table(catalog, "orders").group_by("o_custkey")
+    with pytest.raises(SchemaError, match="unknown column"):
+        t.agg(x=("sum", "nope"))
+    with pytest.raises(SchemaError, match="unknown kind"):
+        t.agg(x=("median", "o_totalprice"))
+
+
+def test_builder_type_mismatch_arithmetic_on_string(catalog):
+    with pytest.raises(SchemaError, match="arithmetic"):
+        table(catalog, "customer").project(x=col("c_comment") + 1)
+    with pytest.raises(SchemaError, match="arithmetic"):
+        table(catalog, "customer").filter(
+            (col("c_mktsegment") * 2) == lit(2))
+
+
+def test_builder_type_mismatch_agg_over_string(catalog):
+    with pytest.raises(SchemaError, match="non-numeric"):
+        (table(catalog, "customer").group_by("c_nationkey")
+         .agg(x=("sum", "c_comment")))
+
+
+def test_builder_non_bool_filter_predicate(catalog):
+    with pytest.raises(SchemaError, match="expected bool"):
+        table(catalog, "orders").filter(col("o_totalprice") + 1.0)
+
+
+def test_builder_pattern_predicate_needs_bytes(catalog):
+    with pytest.raises(SchemaError, match="bytes column"):
+        table(catalog, "orders").filter(col("o_orderkey").contains("x"))
+
+
+def test_builder_join_validation(catalog):
+    li = table(catalog, "lineitem")
+    orders = table(catalog, "orders")
+    with pytest.raises(SchemaError, match="unknown probe key"):
+        li.join(orders, ["nope"], ["o_orderkey"])
+    with pytest.raises(SchemaError, match="unknown build key"):
+        li.join(orders, ["l_orderkey"], ["nope"])
+    with pytest.raises(SchemaError, match="unknown payload"):
+        li.join(orders, ["l_orderkey"], ["o_orderkey"], payload=["nope"])
+    with pytest.raises(SchemaError, match="carry no build payload"):
+        li.join(orders, ["l_orderkey"], ["o_orderkey"],
+                payload=["o_custkey"], how="left_semi")
+    with pytest.raises(SchemaError, match="key type mismatch"):
+        li.join(table(catalog, "customer"), ["l_orderkey"], ["c_comment"])
+    with pytest.raises(SchemaError, match="key type mismatch"):
+        # int key vs float key hashes raw values -> can never match
+        li.join(table(catalog, "customer"), ["l_orderkey"], ["c_acctbal"])
+
+
+# ---------------------------------------------------------------------------
+# optimizer rule 1: predicate pushdown
+# ---------------------------------------------------------------------------
+
+def _find(plan, node_type):
+    out = []
+    stack = [plan]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, node_type):
+            out.append(n)
+        stack.extend(n.children())
+    return out
+
+
+def test_pushdown_merges_filter_into_scan(catalog):
+    plan = (table(catalog, "lineitem")
+            .filter(col("l_quantity") < 10.0)
+            .filter(col("l_discount") > 0.01)
+            .project(v=col("l_extendedprice"))
+            .to_plan())
+    out = opt.push_filters(plan, catalog)
+    assert not _find(out, P.Filter)
+    scans = _find(out, P.TableScan)
+    assert len(scans) == 1 and scans[0].filter is not None
+    refs = scans[0].filter.references()
+    assert refs == {"l_quantity", "l_discount"}
+
+
+def test_pushdown_through_pure_rename_project(catalog):
+    plan = P.Filter(
+        P.Project(P.TableScan("orders"), [("key", col("o_orderkey"))]),
+        col("key") < lit(100))
+    out = opt.push_filters(plan, catalog)
+    assert isinstance(out, P.Project)
+    scan = out.child
+    assert isinstance(scan, P.TableScan)
+    assert scan.filter.references() == {"o_orderkey"}
+
+
+def test_pushdown_stops_at_computed_projection(catalog):
+    plan = P.Filter(
+        P.Project(P.TableScan("orders"),
+                  [("x", col("o_orderkey") + lit(1))]),
+        col("x") < lit(100))
+    out = opt.push_filters(plan, catalog)
+    assert isinstance(out, P.Filter)          # not pushed past the compute
+    assert _find(out, P.TableScan)[0].filter is None
+
+
+# ---------------------------------------------------------------------------
+# optimizer rule 2: projection pruning
+# ---------------------------------------------------------------------------
+
+def test_pruning_restricts_scan_columns(catalog):
+    plan = (table(catalog, "lineitem")
+            .filter(col("l_shipdate") > 9000)
+            .project(v=col("l_extendedprice") * col("l_discount"))
+            .agg(revenue=("sum", "v"))
+            .to_plan())
+    out = opt.prune_columns(opt.push_filters(plan, catalog), catalog)
+    (scan,) = _find(out, P.TableScan)
+    assert set(scan.columns) == {"l_shipdate", "l_extendedprice",
+                                 "l_discount"}
+
+
+def test_pruning_keeps_join_keys_and_payload(catalog):
+    plan = (table(catalog, "lineitem")
+            .join(table(catalog, "orders"), ["l_orderkey"], ["o_orderkey"],
+                  payload=["o_orderdate"])
+            .project("o_orderdate", q=col("l_quantity"))
+            .to_plan())
+    out = opt.prune_columns(plan, catalog)
+    scans = {s.table: s for s in _find(out, P.TableScan)}
+    assert set(scans["lineitem"].columns) == {"l_orderkey", "l_quantity"}
+    assert set(scans["orders"].columns) == {"o_orderkey", "o_orderdate"}
+
+
+# ---------------------------------------------------------------------------
+# optimizer rule 3: join distribution from catalog row counts
+# ---------------------------------------------------------------------------
+
+def _register_rows(catalog, name, n):
+    catalog.register_numpy(
+        name,
+        {"k": np.arange(n, dtype=np.int32) % 1000,
+         "v": np.ones(n, dtype=np.float32)},
+        {"k": dt.INT32, "v": dt.FLOAT32})
+
+
+def test_join_distribution_choice(catalog):
+    _register_rows(catalog, "big_t", (1 << 16) + 1)
+    _register_rows(catalog, "small_t", 64)
+    cfg = opt.OptimizerConfig()
+    probe = P.TableScan("big_t")
+
+    small = opt.choose_join_distribution(
+        P.Join(probe=probe, build=P.TableScan("small_t"),
+               probe_keys=["k"], build_keys=["k"]), catalog, cfg)
+    assert small.distribution == "broadcast"
+
+    big = opt.choose_join_distribution(
+        P.Join(probe=probe, build=P.TableScan("big_t"),
+               probe_keys=["k"], build_keys=["k"]), catalog, cfg)
+    assert big.distribution == "partitioned"
+
+    local = opt.choose_join_distribution(
+        P.Join(probe=probe, build=P.TableScan("big_t"),
+               probe_keys=["k"], build_keys=["k"], distribution="local"),
+        catalog, cfg)
+    assert local.distribution == "local"      # hand-set co-partitioning kept
+
+
+# ---------------------------------------------------------------------------
+# optimizer rule 4: capacity hints from stats
+# ---------------------------------------------------------------------------
+
+def test_max_groups_from_dictionary_domain(catalog):
+    plan = queries.build_query(1, catalog)
+    (agg,) = _find(plan, P.Aggregation)
+    # l_returnflag (3) x l_linestatus (2) = 6 groups + slack -> pow2 = 16
+    assert agg.max_groups == 16
+
+
+def test_max_groups_bounded_by_input_rows(catalog):
+    n = catalog.get("orders").num_rows()
+    plan = opt.optimize(
+        P.Aggregation(P.TableScan("orders"), ["o_custkey"],
+                      [("n", "count", None)]), catalog)
+    assert plan.max_groups == opt._pow2(n + 8)
+
+
+def test_global_agg_capacity_is_one(catalog):
+    plan = queries.build_query(6, catalog)
+    (agg,) = _find(plan, P.Aggregation)
+    assert agg.max_groups == 1
+
+
+def test_max_matches_one_for_unique_exact_key(catalog):
+    plan = queries.build_query(14, catalog)
+    (join,) = _find(plan, P.Join)
+    assert join.build_keys == ["p_partkey"]   # part PK
+    assert join.max_matches == 1
+
+
+def test_max_matches_headroom_for_hashed_composite_key(catalog):
+    plan = queries.build_query(9, catalog)
+    composite = [j for j in _find(plan, P.Join)
+                 if list(j.build_keys) == ["ps_partkey", "ps_suppkey"]]
+    assert composite and composite[0].max_matches == 4
+
+
+def test_capacity_over_budget_keeps_hand_set_max_groups(catalog, monkeypatch):
+    # when the provable bound exceeds the capacity budget, the rule must
+    # not silently lower a hand-set hint to the clamp
+    monkeypatch.setattr(opt, "MAX_CAPACITY", 1 << 10)
+    n = catalog.get("lineitem").num_rows()
+    assert opt._pow2(n + 8) > (1 << 10)
+    plan = opt.derive_capacities(
+        P.Aggregation(P.TableScan("lineitem"), ["l_orderkey"],
+                      [("n", "count", None)], max_groups=1 << 20),
+        catalog)
+    assert plan.max_groups == 1 << 20
+
+
+def test_q18_output_schema_unchanged(catalog):
+    # regression: dropping hand-listed scan columns must not leak extra
+    # orders columns (o_comment & co) into q18's result contract
+    schema = opt.infer_schema(queries.build_query(18, catalog), catalog)
+    assert list(schema) == ["o_orderkey", "o_custkey", "o_orderdate",
+                            "o_totalprice", "sum_qty", "c_name"]
+
+
+def test_composite_join_headroom_without_key_stats():
+    # q9/q20's composite-key joins must stay safe against catalogs that
+    # declare no unique_keys (hash-bucket collisions need expansion room)
+    cat = dbgen.load_catalog(sf=SF)
+    for src_name in cat.tables():
+        cat.get(src_name).unique_keys = ()
+    plan = queries.build_query(9, cat)
+    composite = [j for j in _find(plan, P.Join)
+                 if list(j.build_keys) == ["ps_partkey", "ps_suppkey"]]
+    assert composite and composite[0].max_matches == 4
+
+
+def test_unprovable_uniqueness_keeps_hand_set_capacity(catalog):
+    # build side has no declared key -> the optimizer must not lower the
+    # hand-set expansion capacity
+    _register_rows(catalog, "dups_t", 100)
+    plan = opt.optimize(
+        P.Join(probe=P.TableScan("small_t"), build=P.TableScan("dups_t"),
+               probe_keys=["k"], build_keys=["k"], max_matches=7),
+        catalog)
+    assert plan.max_matches == 7
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: optimized == unoptimized results, session entry points
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qnum", [3, 6])
+def test_optimized_plan_matches_unoptimized(qnum, catalog, session):
+    raw = session.execute(queries.build_query(qnum, catalog, optimized=False))
+    opt_res = session.execute(queries.build_query(qnum, catalog))
+    assert set(raw) == set(opt_res)
+    for c in raw:
+        np.testing.assert_allclose(
+            np.asarray(raw[c], dtype=np.float64),
+            np.asarray(opt_res[c], dtype=np.float64), rtol=1e-5)
+
+
+def test_session_table_collect(session):
+    out = (session.table("orders")
+           .filter(col("o_totalprice") > 0.0)
+           .group_by("o_orderpriority")
+           .agg(n=("count", None))
+           .order_by("o_orderpriority")
+           .collect())
+    assert int(np.sum(out["n"])) == session.catalog.get("orders").num_rows()
+
+
+def test_session_explain_shows_before_and_after(session, catalog):
+    text = session.explain(queries.build_query(3, catalog, optimized=False))
+    assert "== logical plan ==" in text
+    assert "== optimized plan ==" in text
+    assert "TableScan" in text and "max_groups" in text
+
+
+def test_infer_schema_matches_execution(session, catalog):
+    b = (session.table("lineitem")
+         .project("l_orderkey", rev=col("l_extendedprice") * 0.5)
+         .group_by("l_orderkey")
+         .agg(revenue=("sum", "rev"), n=("count", None)))
+    inferred = opt.infer_schema(b.to_plan(), catalog)
+    out = b.collect()
+    assert set(out) == set(inferred)
+    assert inferred["n"].name == "int32"

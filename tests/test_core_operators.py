@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
@@ -53,6 +53,40 @@ def test_lexsort_invalid_rows_last():
     order = np.asarray(rel.lexsort([jnp.asarray(v)], jnp.asarray(validity)))
     assert order[-1] == 1          # the invalid row
     np.testing.assert_array_equal(v[order[:3]], [2, 3, 5])
+
+
+def test_lexsort_descending_int32_min():
+    """Regression: descending used to negate keys, and -INT32_MIN overflows
+    back to INT32_MIN, sorting it first instead of last."""
+    lo = np.iinfo(np.int32).min
+    v = np.array([lo, 0, 5, lo, 7], dtype=np.int32)
+    validity = np.ones(len(v), dtype=bool)
+    order = np.asarray(rel.lexsort([jnp.asarray(v)], jnp.asarray(validity),
+                                   [True]))
+    np.testing.assert_array_equal(v[order], [7, 5, 0, lo, lo])
+
+
+def test_lexsort_descending_negative_zero_stable():
+    """Regression: descending no longer rewrites float keys (-0.0 -> 0.0);
+    equal keys keep their original relative order."""
+    f = np.array([-0.0, 1.0, 0.0, -1.0], dtype=np.float32)
+    validity = np.ones(len(f), dtype=bool)
+    order = np.asarray(rel.lexsort([jnp.asarray(f)], jnp.asarray(validity),
+                                   [True]))
+    assert f[order[0]] == 1.0 and f[order[-1]] == -1.0
+    # the two zeros tie; stability keeps row 0 (-0.0) before row 2 (0.0)
+    assert list(order[1:3]) == [0, 2]
+    assert np.signbit(f[order[1]]) and not np.signbit(f[order[2]])
+
+
+def test_lexsort_descending_bytes_key():
+    """Descending over fixed-width bytes keys (multi-pass path)."""
+    rows = ["bb", "aa", "cc", "ab"]
+    data = dt.encode_bytes(rows, 2)
+    validity = np.ones(len(rows), dtype=bool)
+    order = np.asarray(rel.lexsort([jnp.asarray(data)], jnp.asarray(validity),
+                                   [True]))
+    assert [rows[i] for i in order] == ["cc", "bb", "ab", "aa"]
 
 
 @settings(max_examples=25, deadline=None)
