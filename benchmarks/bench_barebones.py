@@ -8,7 +8,6 @@ import tempfile
 
 from repro.core import Session
 from repro.tpch import dbgen, queries
-from repro.tpch import schema as S
 
 from .common import emit, timeit
 

@@ -1,0 +1,165 @@
+"""Morsel-driven streaming scan vs materialize-then-run (paper §2.2).
+
+Two pipelines over a chunked ``ColumnChunkTable`` at several chunk counts
+(the partition-count knob of paper Table 1):
+
+* a Q1-shaped scan -> project -> group-aggregate pipeline (compute on par
+  with I/O, the case streaming targets), executed three ways:
+    - ``materialized``  drain the whole scan, concatenate every batch, then
+                        run the operators once (I/O, transfer and compute
+                        fully serialized; the seed driver's behavior)
+    - ``streamed``      per-morsel operator execution, synchronous reads
+    - ``prefetched``    per-morsel execution with the async double-buffered
+                        storage->device prefetcher: the read + transfer of
+                        morsel N+1 overlaps compute on morsel N
+* a Q6-shaped selective scan measuring zone-map data skipping end-to-end:
+  with the fact table clustered on ship date, chunks refuted by the pushed
+  predicate are never read and never transferred.
+
+Emits seconds per run plus prefetch-overlap fraction and chunks skipped
+from the executor's ScanStats.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.core.expr import col, lit
+from repro.core.operators import FilterProject, HashAggregation, Pipeline
+from repro.core.streaming import ScanStats
+from repro.core.table import concat_tables
+from repro.storage import ColumnChunkTable, write_table
+from repro.tpch import dbgen
+from repro.tpch import schema as S
+
+from .common import emit, timeit
+
+Q1_COLS = ["l_shipdate", "l_returnflag", "l_linestatus", "l_quantity",
+           "l_extendedprice", "l_discount", "l_tax"]
+Q6_COLS = ["l_shipdate", "l_discount", "l_quantity", "l_extendedprice"]
+
+# Expr objects hash by identity (their statics key the op jit cache), so
+# predicates and pipelines are built once and reused: operators reset their
+# state in open(), and re-building them per run would recompile every call.
+Q1_PRED = col("l_shipdate") <= lit(10471)
+_DISC = lit(1.0) - col("l_discount")
+Q1_PIPE = Pipeline([
+    FilterProject(Q1_PRED, [
+        ("l_returnflag", col("l_returnflag")),
+        ("l_linestatus", col("l_linestatus")),
+        ("l_quantity", col("l_quantity")),
+        ("l_extendedprice", col("l_extendedprice")),
+        ("disc_price", col("l_extendedprice") * _DISC),
+        ("charge", col("l_extendedprice") * _DISC * (lit(1.0) + col("l_tax"))),
+        ("l_discount", col("l_discount")),
+    ]),
+    HashAggregation(["l_returnflag", "l_linestatus"],
+                    [("sum_qty", "sum", "l_quantity"),
+                     ("sum_base", "sum", "l_extendedprice"),
+                     ("sum_disc_price", "sum", "disc_price"),
+                     ("sum_charge", "sum", "charge"),
+                     ("avg_disc", "avg", "l_discount"),
+                     ("count_order", "count", None)], "single", 16),
+])
+
+Q6_PRED = ((col("l_shipdate") >= lit(8766)) & (col("l_shipdate") <= lit(9130))
+           & (col("l_discount").between(lit(0.05), lit(0.07)))
+           & (col("l_quantity") < lit(24.0)))
+Q6_PIPE = Pipeline([
+    FilterProject(Q6_PRED,
+                  [("rev", col("l_extendedprice") * col("l_discount"))]),
+    HashAggregation([], [("revenue", "sum", "rev")], "single", 1),
+])
+
+
+def _drain(pipe, batches, out_col):
+    pipe.open()
+    outs = []
+    for b in batches:
+        outs.extend(pipe.add_input(b))
+    outs.extend(pipe.finish())
+    jax.block_until_ready([t.columns[out_col] for t in outs])
+    return outs
+
+
+def run_materialized(src, cols, pred, pipe, out_col):
+    batches = list(src.scan(1, cols, 1 << 20, filter_expr=pred))
+    table = batches[0] if len(batches) == 1 else concat_tables(batches)
+    return _drain(pipe, [table], out_col)
+
+
+def run_streamed(src, cols, pred, pipe, out_col):
+    return _drain(pipe, src.scan(1, cols, 1 << 20, filter_expr=pred), out_col)
+
+
+def run_prefetched(src, cols, pred, pipe, out_col, stats: ScanStats):
+    morsels = src.stream(1, cols, 1 << 20, filter_expr=pred,
+                         prefetch_depth=2, stats=stats)
+    return _drain(pipe, morsels, out_col)
+
+
+def run(sf: float = 0.05, chunk_counts=(2, 8, 32), iters: int = 5):
+    li = dbgen.generate(sf=sf)["lineitem"]
+    order = np.argsort(li["l_shipdate"], kind="stable")
+    li = {c: v[order] for c, v in li.items()}   # clustered layout (zone map)
+
+    for chunks in chunk_counts:
+        with tempfile.TemporaryDirectory() as root:
+            write_table(root, "lineitem", li, S.LINEITEM, chunks=chunks)
+            # streaming comparison with skipping off: every mode reads all
+            # chunks, the difference is purely how I/O, transfer and
+            # compute are scheduled
+            src = ColumnChunkTable(root, "lineitem", skip_with_stats=False)
+
+            t_mat = timeit(lambda: run_materialized(
+                src, Q1_COLS, Q1_PRED, Q1_PIPE, "sum_qty"),
+                warmup=1, iters=iters)
+            t_str = timeit(lambda: run_streamed(
+                src, Q1_COLS, Q1_PRED, Q1_PIPE, "sum_qty"),
+                warmup=1, iters=iters)
+            holder = {"stats": ScanStats()}
+
+            def prefetched(source=src, cols=Q1_COLS, pred=Q1_PRED,
+                           pipe=Q1_PIPE, out="sum_qty"):
+                holder["stats"] = ScanStats()   # fresh stats per run
+                run_prefetched(source, cols, pred, pipe, out,
+                               holder["stats"])
+
+            t_pre = timeit(prefetched, warmup=1, iters=iters)
+            stats = holder["stats"]
+
+            emit(f"scan_pipeline_materialized_c{chunks}", t_mat,
+                 f"chunks={chunks}",
+                 {"chunks": chunks, "rows": len(li["l_shipdate"])})
+            emit(f"scan_pipeline_streamed_c{chunks}", t_str,
+                 f"speedup={t_mat / t_str:.2f}x", {"chunks": chunks})
+            emit(f"scan_pipeline_prefetched_c{chunks}", t_pre,
+                 f"speedup={t_mat / t_pre:.2f}x;"
+                 f"overlap={stats.prefetch_overlap:.2f}",
+                 {"chunks": chunks, "stats": stats.summary()})
+
+            # zone-map skipping end-to-end (selective Q6 predicate over the
+            # clustered table): refuted chunks are never read, never moved
+            skip_src = ColumnChunkTable(root, "lineitem")
+            t_mat6 = timeit(lambda: run_materialized(
+                ColumnChunkTable(root, "lineitem", skip_with_stats=False),
+                Q6_COLS, Q6_PRED, Q6_PIPE, "revenue"),
+                warmup=1, iters=iters)
+            t_skip = timeit(lambda: prefetched(
+                skip_src, Q6_COLS, Q6_PRED, Q6_PIPE, "revenue"),
+                warmup=1, iters=iters)
+            s = holder["stats"]
+            emit(f"scan_pipeline_q6_materialized_c{chunks}", t_mat6,
+                 f"chunks={chunks}", {"chunks": chunks})
+            emit(f"scan_pipeline_q6_prefetch_skip_c{chunks}", t_skip,
+                 f"speedup={t_mat6 / t_skip:.2f}x;"
+                 f"chunks_skipped={s.chunks_skipped}/{s.chunks_total};"
+                 f"bytes_read={s.bytes_read}",
+                 {"chunks": chunks, "stats": s.summary()})
+
+
+if __name__ == "__main__":
+    run()

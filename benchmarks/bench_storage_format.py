@@ -15,7 +15,7 @@ import tempfile
 import jax.numpy as jnp
 import numpy as np
 
-from repro.storage import ColumnChunkTable, PagedTable, write_paged_table
+from repro.storage import PagedTable, write_paged_table
 from repro.tpch import dbgen
 from repro.tpch import schema as S
 

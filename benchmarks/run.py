@@ -3,18 +3,30 @@
 
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description="Run benchmark suites")
+    parser.add_argument("--sf", type=float, default=None,
+                        help="TPC-H scale factor override for suites that "
+                             "take one (CI smoke runs use a tiny value)")
+    parser.add_argument("--only", default=None,
+                        help="substring filter on suite names")
+    args = parser.parse_args(argv)
+
     from . import (bench_barebones, bench_cold_hot, bench_cost_perf,
                    bench_exchange, bench_q5_scaling, bench_scaleup,
-                   bench_storage_format, bench_weak_scaling)
+                   bench_scan_pipeline, bench_storage_format,
+                   bench_weak_scaling)
 
     suites = [
         ("storage_format(§2.2)", bench_storage_format.run),
+        ("scan_pipeline(§2.2)", bench_scan_pipeline.run),
         ("barebones(Table1)", bench_barebones.run),
         ("exchange(Fig5,§3.4)", bench_exchange.run),
         ("q5_scaling(Fig6)", bench_q5_scaling.run),
@@ -23,17 +35,34 @@ def main() -> None:
         ("cold_hot(Table3)", bench_cold_hot.run),
         ("cost_perf(Fig9)", bench_cost_perf.run),
     ]
-    failures = 0
+    if args.only:
+        suites = [(n, fn) for n, fn in suites if args.only in n]
+
+    results = []   # (name, ok, seconds)
     for name, fn in suites:
         print(f"# === {name} ===", flush=True)
+        kwargs = {}
+        if args.sf is not None and "sf" in inspect.signature(fn).parameters:
+            kwargs["sf"] = args.sf
         t0 = time.time()
+        ok = True
         try:
-            fn()
+            fn(**kwargs)
         except Exception:   # noqa: BLE001 — keep the harness running
-            failures += 1
+            ok = False
             print(f"# FAILED {name}", flush=True)
             traceback.print_exc()
-        print(f"# --- {name} done in {time.time() - t0:.0f}s", flush=True)
+        dt = time.time() - t0
+        results.append((name, ok, dt))
+        print(f"# --- {name} done in {dt:.0f}s", flush=True)
+
+    # scannable per-suite summary for CI logs
+    print("# === summary ===", flush=True)
+    for name, ok, dt in results:
+        print(f"# {'PASS' if ok else 'FAIL'} {name} ({dt:.0f}s)", flush=True)
+    failures = sum(1 for _, ok, _ in results if not ok)
+    print(f"# {len(results) - failures}/{len(results)} suites passed",
+          flush=True)
     if failures:
         sys.exit(1)
 

@@ -13,5 +13,6 @@ from . import dtypes, expr, plan  # noqa: F401
 from .builder import QueryBuilder, SchemaError, table  # noqa: F401
 from .exchange import HostExchange, ICIExchange  # noqa: F401
 from .optimizer import OptimizerConfig, explain, optimize  # noqa: F401
-from .session import Catalog, Session  # noqa: F401
+from .session import Catalog, Session, TableSource  # noqa: F401
+from .streaming import MorselPrefetcher, ScanStats  # noqa: F401
 from .table import DeviceTable, concat_tables  # noqa: F401

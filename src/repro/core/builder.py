@@ -26,7 +26,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from . import dtypes as dt
 from . import plan as P
-from .expr import (BinaryOp, BytesMatch, ColumnRef, Expr, IsIn, Literal,
+from .expr import (BinaryOp, BytesMatch, Expr, IsIn, Literal,
                    UnaryOp, col)
 from . import optimizer as opt
 

@@ -17,14 +17,16 @@ conversion around them, exactly like CudfToVelox/CudfFromVelox insertion.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, Optional, Sequence
 
 import numpy as np
 
 from . import operators as ops
 from . import plan as P
 from .exchange import ExchangeProtocol, ICIExchange
+from .streaming import ScanStats
 from .table import DeviceTable, concat_tables
 
 
@@ -38,6 +40,10 @@ class ExecutionContext:
     host_only_ops: frozenset = frozenset()
     collect_stats: bool = True
     mesh: Optional[object] = None           # jax Mesh with a 'workers' axis
+    # morsel-driven scans: async storage->device prefetch with a bounded
+    # queue of `prefetch_depth` morsels (False = synchronous baseline)
+    streaming: bool = True
+    prefetch_depth: int = 2
 
     def __post_init__(self):
         if self.exchange is None:
@@ -52,9 +58,55 @@ class ExecutionContext:
 
 @dataclasses.dataclass
 class Stream:
-    """A stage output: an iterator of worker-stacked batches + distribution."""
+    """A stage output: an iterator of worker-stacked batches + distribution.
+
+    ``scan`` is set while the stream is still the raw output of a
+    ``StreamingScan`` stage: downstream Filter/Project nodes fuse into the
+    stage (per-morsel execution) instead of wrapping another pipeline.
+    """
     batches: Iterator[DeviceTable]
     dist: str                               # 'partitioned' | 'replicated'
+    scan: Optional["StreamingScan"] = None
+
+
+class StreamingScan:
+    """Morsel-driven scan stage (paper §2.2, challenge 1).
+
+    Drains the bounded prefetch queue of a ``TableSource.stream`` and runs
+    the scan-fused operator pipeline (pushed-down filter, projections, and
+    any other fused stages) on each morsel *as it arrives* -- storage read
+    and host->device transfer of morsel N+1 overlap the compute on morsel N,
+    instead of the concat-then-run baseline where I/O, transfer and compute
+    fully serialize.
+    """
+
+    def __init__(self, table: str, morsels: Iterator[DeviceTable],
+                 stats: ScanStats, op_seconds: Optional[Dict[str, float]] = None):
+        self.table = table
+        self.morsels = morsels
+        self.stats = stats
+        self.pipe = ops.Pipeline()
+        self._op_seconds = op_seconds if op_seconds is not None else {}
+
+    def fuse(self, op: ops.Operator) -> None:
+        """Append an operator to the per-morsel scan pipeline (must be
+        called before iteration starts, i.e. during plan walking)."""
+        self.pipe.ops.append(op)
+
+    def batches(self) -> Iterator[DeviceTable]:
+        spent = 0.0
+        self.pipe.open()
+        for morsel in self.morsels:
+            t0 = time.perf_counter()
+            outs = self.pipe.add_input(morsel)
+            spent += time.perf_counter() - t0
+            yield from outs
+        t0 = time.perf_counter()
+        outs = self.pipe.finish()
+        spent += time.perf_counter() - t0
+        self._op_seconds["StreamingScan"] = (
+            self._op_seconds.get("StreamingScan", 0.0) + spent)
+        yield from outs
 
 
 class Driver:
@@ -62,6 +114,15 @@ class Driver:
         self.ctx = ctx
         self.op_seconds: Dict[str, float] = {}
         self.conversion_stats: Dict[str, int] = {}
+        self.scan_stats: Dict[str, ScanStats] = {}
+
+    def executor_stats(self) -> Dict[str, object]:
+        """Per-query executor stats: scan counters + operator timings."""
+        return {
+            "tables": {t: s.summary() for t, s in self.scan_stats.items()},
+            "op_seconds": dict(self.op_seconds),
+            "conversions": dict(self.conversion_stats),
+        }
 
     # -- public API ----------------------------------------------------------
     def execute(self, node: P.PlanNode) -> DeviceTable:
@@ -159,9 +220,28 @@ class Driver:
 
     def _exec_tablescan(self, node: P.TableScan) -> Stream:
         src = self.ctx.catalog.get(node.table)
+        stats = self.scan_stats.setdefault(node.table, ScanStats())
+        if self.ctx.streaming and hasattr(src, "stream"):
+            morsels = src.stream(self._w, node.columns, self.ctx.batch_rows,
+                                 filter_expr=node.filter,
+                                 prefetch_depth=self.ctx.prefetch_depth,
+                                 sharding=self.ctx.worker_sharding(),
+                                 stats=stats)
+            scan = StreamingScan(node.table, morsels, stats, self.op_seconds)
+            if node.filter is not None:
+                fp = ops.FilterProject(node.filter)
+                if fp.name in self.ctx.host_only_ops:
+                    return Stream(self._run_pipeline(fp, scan.batches()),
+                                  "partitioned")
+                scan.fuse(fp)
+            return Stream(scan.batches(), "partitioned", scan=scan)
+        # synchronous baseline: read + transfer inline with compute
+        kwargs = {}
+        if "stats" in inspect.signature(src.scan).parameters:
+            kwargs["stats"] = stats
         batches = self._place(src.scan(self._w, node.columns,
                                        self.ctx.batch_rows,
-                                       filter_expr=node.filter))
+                                       filter_expr=node.filter, **kwargs))
         if node.filter is not None:
             fp = ops.FilterProject(node.filter)
             return Stream(self._run_pipeline(fp, batches), "partitioned")
@@ -175,11 +255,17 @@ class Driver:
     def _exec_filter(self, node: P.Filter) -> Stream:
         child = self._stream(node.child)
         fp = ops.FilterProject(node.predicate, None, node.compact)
+        if child.scan is not None and fp.name not in self.ctx.host_only_ops:
+            child.scan.fuse(fp)          # per-morsel, inside the scan stage
+            return child
         return Stream(self._run_pipeline(fp, child.batches), child.dist)
 
     def _exec_project(self, node: P.Project) -> Stream:
         child = self._stream(node.child)
         fp = ops.FilterProject(None, node.projections)
+        if child.scan is not None and fp.name not in self.ctx.host_only_ops:
+            child.scan.fuse(fp)          # per-morsel, inside the scan stage
+            return child
         return Stream(self._run_pipeline(fp, child.batches), child.dist)
 
     def _exec_aggregation(self, node: P.Aggregation) -> Stream:

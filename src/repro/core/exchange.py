@@ -30,7 +30,7 @@ import dataclasses
 import functools
 import pickle
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +38,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import relational as rel
-from .table import DeviceTable, concat_tables
+from .table import DeviceTable
 
 
 @dataclasses.dataclass

@@ -82,6 +82,45 @@ class Operator:
 
 
 # ---------------------------------------------------------------------------
+# Pipeline: compose operators into one stage
+# ---------------------------------------------------------------------------
+
+class Pipeline(Operator):
+    """Compose a list of operators into a single streaming stage.
+
+    Used by the driver's ``StreamingScan`` to run the scan-fused chain
+    (pushed-down filter, projections, ...) per morsel as each chunk arrives
+    from the prefetch queue. ``finish`` flushes each operator in order,
+    threading its flushed output through the operators downstream of it.
+    """
+
+    name = "Pipeline"
+
+    def __init__(self, ops_: Sequence[Operator] = ()):
+        self.ops: List[Operator] = list(ops_)
+
+    def open(self):
+        for op in self.ops:
+            op.open()
+
+    def add_input(self, batch):
+        outs = [batch]
+        for op in self.ops:
+            outs = [o for b in outs for o in op.add_input(b)]
+        return outs
+
+    def finish(self):
+        carry: List[DeviceTable] = []
+        for op in self.ops:
+            fed: List[DeviceTable] = []
+            for b in carry:
+                fed.extend(op.add_input(b))
+            fed.extend(op.finish())
+            carry = fed
+        return carry
+
+
+# ---------------------------------------------------------------------------
 # FilterProject
 # ---------------------------------------------------------------------------
 

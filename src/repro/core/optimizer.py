@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set
 
 from . import dtypes as dt
 from . import plan as P
@@ -470,9 +470,24 @@ def _explain_into(node: P.PlanNode, catalog, depth: int,
             suffix = f"  [<= {row_bound(node, catalog)} rows]"
         except TypeError:
             pass
+        if isinstance(node, P.TableScan):
+            suffix += _scan_storage_note(node, catalog)
     lines.append("  " * depth + _describe(node) + suffix)
     for c in node.children():
         _explain_into(c, catalog, depth + 1, lines)
+
+
+def _scan_storage_note(node: P.TableScan, catalog) -> str:
+    """Storage-side annotation: chunk count and whether the pushed-down
+    predicate is eligible for zone-map data skipping on this source."""
+    src = catalog.get(node.table)
+    chunks = getattr(src, "num_chunks", None)
+    if chunks is None:
+        return ""
+    note = f"  [chunks={chunks}"
+    if getattr(src, "skip_with_stats", False) and node.filter is not None:
+        note += ", zone-map skip"
+    return note + "]"
 
 
 def _describe(node: P.PlanNode) -> str:

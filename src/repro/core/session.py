@@ -10,14 +10,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Iterator, Optional, Sequence
+from typing import Dict, Iterator, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from .driver import Driver, ExecutionContext
 from .exchange import ExchangeProtocol, ICIExchange
 from .plan import PlanNode
+from .streaming import HostMorsel, MorselPrefetcher, ScanStats, morsel_to_device
 from .table import DeviceTable
 
 
@@ -28,9 +28,45 @@ class TableSource:
     # identify a row (primary/candidate keys), e.g. (("o_orderkey",),)
     unique_keys: tuple = ()
 
-    def scan(self, num_workers: int, columns, batch_rows: int,
-             filter_expr=None) -> Iterator[DeviceTable]:
+    def _host_morsels(self, num_workers: int, columns, batch_rows: int,
+                      filter_expr=None,
+                      stats: Optional[ScanStats] = None
+                      ) -> Iterator[HostMorsel]:
+        """Host-side scan units (storage reads only, no device transfer).
+        Backends implement this once; ``scan``/``stream`` wrap it."""
         raise NotImplementedError
+
+    def scan(self, num_workers: int, columns, batch_rows: int,
+             filter_expr=None,
+             stats: Optional[ScanStats] = None) -> Iterator[DeviceTable]:
+        """Synchronous scan: read + device-put inline on the caller's thread
+        (the materialize-then-run baseline the paper starts from)."""
+        for morsel in self._host_morsels(num_workers, columns, batch_rows,
+                                         filter_expr, stats=stats):
+            if stats is not None:
+                stats.morsels += 1
+                stats.bytes_transferred += morsel.nbytes()
+            yield morsel_to_device(morsel)
+
+    def stream(self, num_workers: int, columns, batch_rows: int,
+               filter_expr=None, prefetch_depth: int = 2, sharding=None,
+               stats: Optional[ScanStats] = None) -> MorselPrefetcher:
+        """Asynchronous scan: a background thread reads morsel N+1 from
+        storage and transfers it to the device while morsel N computes
+        (double-buffered at ``prefetch_depth``). Returns an iterator of
+        device morsels; counters accumulate into ``stats``.
+
+        Sources that predate the morsel API (override ``scan`` only, not
+        ``_host_morsels``) are still prefetched: their device batches feed
+        the same bounded queue."""
+        if (type(self)._host_morsels is TableSource._host_morsels
+                and type(self).scan is not TableSource.scan):
+            gen = self.scan(num_workers, columns, batch_rows, filter_expr)
+        else:
+            gen = self._host_morsels(num_workers, columns, batch_rows,
+                                     filter_expr, stats=stats)
+        return MorselPrefetcher(gen, depth=prefetch_depth, sharding=sharding,
+                                stats=stats)
 
     def num_rows(self) -> int:
         raise NotImplementedError
@@ -51,12 +87,15 @@ class InMemoryTable(TableSource):
     def num_rows(self) -> int:
         return self._n
 
-    def scan(self, num_workers: int, columns, batch_rows: int,
-             filter_expr=None) -> Iterator[DeviceTable]:
+    def _host_morsels(self, num_workers: int, columns, batch_rows: int,
+                      filter_expr=None,
+                      stats: Optional[ScanStats] = None
+                      ) -> Iterator[HostMorsel]:
         cols = list(columns) if columns else list(self.data.keys())
         w = num_workers
         per_worker = math.ceil(self._n / w) if self._n else 1
         n_batches = max(1, math.ceil(per_worker / batch_rows))
+        schema = {c: self.schema[c] for c in cols}
         for b in range(n_batches):
             lo = b * batch_rows
             hi = min(lo + batch_rows, per_worker)
@@ -65,10 +104,7 @@ class InMemoryTable(TableSource):
             for name in cols:
                 dt_ = self.schema[name]
                 arr = self.data[name]
-                shape = (w, cap) + dt_.storage_shape(1)[1:] if dt_.name == "bytes" \
-                    else (w, cap)
-                if dt_.name == "bytes":
-                    shape = (w, cap, dt_.width)
+                shape = (w, cap, dt_.width) if dt_.name == "bytes" else (w, cap)
                 buf = np.zeros(shape, dtype=dt_.np_dtype())
                 for wk in range(w):
                     base = wk * per_worker
@@ -76,10 +112,10 @@ class InMemoryTable(TableSource):
                     if e > s:
                         buf[wk, : e - s] = arr[s:e]
                         stacked_valid[wk, : e - s] = True
-                stacked_cols[name] = jnp.asarray(buf)
-            yield DeviceTable(stacked_cols,
-                              jnp.asarray(stacked_valid),
-                              {c: self.schema[c] for c in cols})
+                stacked_cols[name] = buf
+                if stats is not None:
+                    stats.bytes_read += buf.nbytes
+            yield HostMorsel(stacked_cols, stacked_valid, schema)
 
 
 class Catalog:
@@ -108,6 +144,11 @@ class Session:
     batch_rows: int = 8192
     host_only_ops: frozenset = frozenset()
     mesh: Optional[object] = None          # Mesh with a 'workers' axis
+    # morsel-driven scan pipeline: async storage->device prefetch with a
+    # bounded queue of `prefetch_depth` in-flight morsels (False = the
+    # synchronous materialize-then-run baseline)
+    streaming: bool = True
+    prefetch_depth: int = 2
 
     def context(self) -> ExecutionContext:
         return ExecutionContext(
@@ -117,12 +158,19 @@ class Session:
             batch_rows=self.batch_rows,
             host_only_ops=self.host_only_ops,
             mesh=self.mesh,
+            streaming=self.streaming,
+            prefetch_depth=self.prefetch_depth,
         )
 
     def execute(self, plan: PlanNode) -> Dict[str, np.ndarray]:
         driver = Driver(self.context())
         self.last_driver = driver
         return driver.collect(plan)
+
+    def executor_stats(self) -> Dict[str, object]:
+        """Stats from the most recent ``execute`` (scan + operator timings)."""
+        driver = getattr(self, "last_driver", None)
+        return driver.executor_stats() if driver is not None else {}
 
     # -- fluent frontend + planner entry points -----------------------------
     def table(self, name: str, columns=None):
@@ -136,7 +184,28 @@ class Session:
         from .optimizer import optimize
         return optimize(plan, self.catalog)
 
-    def explain(self, plan: PlanNode) -> str:
-        """Pretty-print a plan before and after optimization."""
+    def explain(self, plan: PlanNode, analyze: bool = False) -> str:
+        """Pretty-print a plan before and after optimization.
+
+        With ``analyze=True`` the (optimized) plan is also executed and the
+        executor's per-table scan stats -- bytes read, bytes transferred,
+        chunks skipped by zone maps, prefetch-overlap fraction -- plus
+        operator timings are appended (EXPLAIN ANALYZE)."""
         from .optimizer import explain_before_after
-        return explain_before_after(plan, self.catalog)
+        text = explain_before_after(plan, self.catalog)
+        if not analyze:
+            return text
+        self.execute(self.optimize(plan))
+        lines = ["== executor stats =="]
+        stats = self.executor_stats()
+        for tname, s in sorted(stats.get("tables", {}).items()):
+            lines.append(
+                f"scan {tname}: morsels={s['morsels']} "
+                f"chunks={s['chunks_total']} "
+                f"chunks_skipped={s['chunks_skipped']} "
+                f"bytes_read={s['bytes_read']} "
+                f"bytes_transferred={s['bytes_transferred']} "
+                f"prefetch_overlap={s['prefetch_overlap']:.2f}")
+        for op, sec in sorted(stats.get("op_seconds", {}).items()):
+            lines.append(f"op {op}: {sec:.4f}s")
+        return text + "\n" + "\n".join(lines)

@@ -14,7 +14,7 @@ reassigned on failure (elastic data reassignment).
 from __future__ import annotations
 
 import collections
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

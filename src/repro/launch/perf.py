@@ -14,8 +14,8 @@ Cells (selection rationale in EXPERIMENTS.md §Perf):
      (MoE EP dispatch). variants: gspmd_cap1.25 | gspmd_cap1.0 | explicit_a2a
 """
 
-import argparse
-import json
+import argparse  # noqa: E402  (XLA_FLAGS must be set before jax imports)
+import json  # noqa: E402
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "perf")

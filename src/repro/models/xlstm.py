@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 
 from .layers import DTYPE, _init
-from .sharding import shard_act
 
 CHUNK = 64
 

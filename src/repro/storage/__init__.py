@@ -12,4 +12,5 @@ Two formats:
 """
 
 from .colchunk import ColumnChunkTable, read_column_chunk, write_table  # noqa: F401
-from .paged import PagedTable, write_paged_table  # noqa: F401
+from .paged import PagedTable, PagedTableSource, write_paged_table  # noqa: F401
+from .zonemap import eval_range, may_match  # noqa: F401

@@ -234,10 +234,23 @@ def load_catalog(sf: float = 0.01, seed: int = 19940729) -> Catalog:
     return cat
 
 
+# fact tables are clustered (sorted) on their date column before chunking,
+# so chunk min/max stats form a useful zone map for date-range predicates
+# (the layout a date-partitioned warehouse table would have)
+CLUSTER_KEYS = {"lineitem": "l_shipdate", "orders": "o_orderdate"}
+
+
 def write_dataset(root: str, sf: float = 0.01, seed: int = 19940729,
-                  chunks: int = 4) -> Dict[str, Dict[str, np.ndarray]]:
-    """Generate + persist in the column-chunk format. Returns the data."""
+                  chunks: int = 4,
+                  cluster: bool = True) -> Dict[str, Dict[str, np.ndarray]]:
+    """Generate + persist in the column-chunk format. Returns the data
+    actually written (row order included), so oracles computed from the
+    return value always agree with scans of the files."""
     data = generate(sf, seed)
+    if cluster:
+        for name, key in CLUSTER_KEYS.items():
+            order = np.argsort(data[name][key], kind="stable")
+            data[name] = {c: v[order] for c, v in data[name].items()}
     os.makedirs(root, exist_ok=True)
     for name, tab in data.items():
         c = chunks if name in ("lineitem", "orders", "partsupp", "customer",
@@ -246,7 +259,7 @@ def write_dataset(root: str, sf: float = 0.01, seed: int = 19940729,
     return data
 
 
-def storage_catalog(root: str, skip_with_stats: bool = False) -> Catalog:
+def storage_catalog(root: str, skip_with_stats: bool = True) -> Catalog:
     cat = Catalog()
     for name in S.SCHEMAS:
         src = ColumnChunkTable(root, name, skip_with_stats)

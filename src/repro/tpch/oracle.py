@@ -7,7 +7,6 @@ dict-of-arrays output of dbgen.generate().
 
 from __future__ import annotations
 
-from typing import Dict
 
 import numpy as np
 

@@ -10,7 +10,7 @@ training loop — host touches nothing but scalars.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Unit + property tests for the core engine primitives and operators."""
 
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
@@ -9,7 +8,7 @@ import jax.numpy as jnp
 from repro.core import dtypes as dt
 from repro.core import relational as rel
 from repro.core import operators as ops
-from repro.core.expr import col, lit, prefix_code, year
+from repro.core.expr import col, prefix_code, year
 from repro.core.table import DeviceTable, concat_tables
 
 

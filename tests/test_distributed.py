@@ -14,7 +14,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -31,7 +30,8 @@ def _run(script: str) -> str:
 
 def test_query_on_8_device_mesh_matches_oracle():
     out = _run(r"""
-import jax, numpy as np
+import jax
+import numpy as np
 assert jax.device_count() == 8, jax.devices()
 mesh = jax.make_mesh((8,), ("workers",))
 from repro.core import Session, ICIExchange
@@ -51,7 +51,9 @@ print("rows-match OK")
 
 def test_ici_exchange_lowers_to_all_to_all():
     out = _run(r"""
-import jax, numpy as np, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
+import numpy as np
 mesh = jax.make_mesh((8,), ("workers",))
 from repro.core import dtypes as dt
 from repro.core.table import DeviceTable
@@ -76,7 +78,9 @@ print("bcast OK")
 
 def test_exchange_correctness_on_mesh():
     out = _run(r"""
-import jax, numpy as np, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
+import numpy as np
 mesh = jax.make_mesh((8,), ("workers",))
 from repro.core import dtypes as dt
 from repro.core.table import DeviceTable

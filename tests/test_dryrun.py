@@ -15,7 +15,8 @@ def test_single_cell_lowers_on_production_mesh(tmp_path):
     script = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-import json, sys
+import json
+import sys
 from repro.launch import dryrun
 rec = dryrun.lower_cell("xlstm_125m", "decode_32k", multi_pod=False)
 assert rec["chips"] == 256, rec

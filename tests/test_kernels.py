@@ -1,7 +1,6 @@
 """Pallas kernels vs ref.py oracles: shape/dtype sweeps + hypothesis
 property tests, all in interpret mode on CPU."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -3,8 +3,6 @@ detection, term arithmetic."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch import hloparse, roofline as rf
 
@@ -65,7 +63,8 @@ def test_collective_bytes_detected_on_mesh():
     import subprocess, sys, os
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     script = r"""
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch import hloparse
 mesh = jax.make_mesh((8,), ("x",))

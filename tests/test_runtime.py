@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager, restore_latest
-from repro.configs import ShapeSpec, get_config
+from repro.configs import get_config
 from repro.data import TokenPipeline
 from repro.models import build_model
 from repro.runtime import FailureInjector, StragglerMonitor, TrainLoop

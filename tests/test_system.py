@@ -3,7 +3,6 @@ storage through device-resident operators and exchange to results, plus the
 training stack wired to the engine's data layer."""
 
 import numpy as np
-import pytest
 
 import jax
 

@@ -6,7 +6,6 @@ host-staged baseline) — all shards execute on one CPU device here, true
 multi-device placement is covered by tests/test_distributed.py.
 """
 
-import numpy as np
 import pytest
 
 from repro.core import HostExchange, ICIExchange, Session

@@ -8,7 +8,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import xlstm
 from repro.models.xlstm import (MLSTMState, _mlstm_chunkwise,
-                                _mlstm_recurrent, init_mlstm_state)
+                                _mlstm_recurrent)
 
 
 def _rand_inputs(b, s, nh, dh, seed=0):
