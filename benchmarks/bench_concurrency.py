@@ -1,0 +1,138 @@
+"""Concurrent-serving throughput/latency vs the serial baseline.
+
+The paper's coordinator admits many concurrent queries and multiplexes GPU
+workers under a device-memory budget. This suite measures what that serving
+layer buys: N concurrent clients each submit a fixed dashboard of TPC-H
+queries through ``Session.submit`` (admission control + plan/result caches
++ in-flight coalescing + interleaved morsel pipelines), against a serial
+baseline that executes the identical workload one query at a time with no
+scheduler. Reported per client count: wall time, query throughput, p50/p95
+latency, and the speedup over serial; every scheduled result is validated
+against the numpy oracle. A "cold" scheduler row disables the result cache
+and coalescing (every query executes for real; the plan cache stays on),
+separating pipeline-overlap + plan-cache gains from result-reuse gains.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import Session, SchedulerConfig
+from repro.tpch import dbgen, oracle, queries
+
+from .common import emit
+
+DASHBOARD = (1, 6, 14, 3)           # quick, shape-diverse queries
+CLIENT_COUNTS = (1, 4, 16)
+
+
+def _assert_oracle(engine: dict, orc: dict, qnum: int) -> None:
+    """Order-insensitive engine-vs-oracle row match (numeric columns)."""
+    cols = [c for c in orc if c in engine]
+    assert cols, f"q{qnum}: no common columns"
+    n = np.atleast_1d(np.asarray(orc[cols[0]])).shape[0]
+    eng = np.stack([np.asarray(engine[c], dtype=np.float64).reshape(n)
+                    for c in cols])
+    orc_ = np.stack([np.asarray(orc[c], dtype=np.float64).reshape(n)
+                     for c in cols])
+    eo = np.lexsort(np.round(eng, 2)[::-1])
+    oo = np.lexsort(np.round(orc_, 2)[::-1])
+    np.testing.assert_allclose(eng[:, eo], orc_[:, oo], rtol=2e-3, atol=1e-2,
+                               err_msg=f"q{qnum} mismatch vs oracle")
+
+
+def _serial(catalog, n_clients: int) -> float:
+    """Baseline: the same workload, one query at a time, no scheduler."""
+    session = Session(catalog, num_workers=1, batch_rows=16384)
+    t0 = time.perf_counter()
+    for _ in range(n_clients):
+        for qnum in DASHBOARD:
+            session.execute(queries.build_query(qnum, catalog))
+    return time.perf_counter() - t0
+
+
+def _scheduled(catalog, n_clients: int, oracles=None,
+               cache_results: bool = True):
+    """N client threads submitting through the scheduler; returns
+    (wall_seconds, sorted per-query latencies, scheduler stats)."""
+    session = Session(catalog, num_workers=1, batch_rows=16384)
+    session.scheduler_config = SchedulerConfig(
+        memory_budget=512 << 20, max_concurrency=8,
+        max_queue=max(64, n_clients * len(DASHBOARD)),
+        cache_results=cache_results)
+    latencies: list = []
+    errors: list = []
+
+    def client():
+        try:
+            handles = [session.submit(
+                queries.build_query(q, catalog, optimized=False))
+                for q in DASHBOARD]
+            for qnum, h in zip(DASHBOARD, handles):
+                res = h.result()
+                latencies.append(h.latency)
+                if oracles is not None:
+                    _assert_oracle(res, oracles[qnum], qnum)
+        except Exception as exc:  # noqa: BLE001 -- fail the suite below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=client) for _ in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    latencies.sort()
+    return wall, latencies, session.scheduler().stats()
+
+
+def run(sf: float = 0.005) -> None:
+    catalog = dbgen.load_catalog(sf=sf)
+    data = dbgen.generate(sf=sf)
+    oracles = {q: oracle.ORACLES[q](data) for q in DASHBOARD}
+
+    # warm jit caches once so neither path pays first-compile inside timing
+    warm = Session(catalog, num_workers=1, batch_rows=16384)
+    for qnum in DASHBOARD:
+        warm.execute(queries.build_query(qnum, catalog))
+
+    for n in CLIENT_COUNTS:
+        n_queries = n * len(DASHBOARD)
+        serial_s = _serial(catalog, n)
+        wall, lats, stats = _scheduled(catalog, n, oracles=oracles)
+        cold_wall, _, _ = _scheduled(catalog, n, cache_results=False)
+        speedup = serial_s / wall
+        cold_speedup = serial_s / cold_wall
+        p50 = lats[len(lats) // 2]
+        p95 = lats[min(len(lats) - 1, int(len(lats) * 0.95))]
+        emit(f"concurrency_c{n}", wall,
+             derived=f"{speedup:.2f}x_vs_serial",
+             detail={
+                 "clients": n,
+                 "queries": n_queries,
+                 "serial_seconds": serial_s,
+                 "scheduled_seconds": wall,
+                 "cold_scheduled_seconds": cold_wall,
+                 "speedup_vs_serial": speedup,
+                 "cold_speedup_vs_serial": cold_speedup,
+                 "throughput_qps": n_queries / wall,
+                 "serial_throughput_qps": n_queries / serial_s,
+                 "latency_p50_s": p50,
+                 "latency_p95_s": p95,
+                 "scheduler": stats,
+             })
+        print(f"# clients={n:2d}: serial {serial_s:.2f}s | scheduled "
+              f"{wall:.2f}s ({speedup:.2f}x) | cold {cold_wall:.2f}s "
+              f"({cold_speedup:.2f}x) | p50 {p50 * 1e3:.0f}ms "
+              f"p95 {p95 * 1e3:.0f}ms | coalesced={stats['coalesced']} "
+              f"cache_hits={stats['result_cache_hits']}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

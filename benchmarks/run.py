@@ -19,14 +19,15 @@ def main(argv=None) -> None:
                         help="substring filter on suite names")
     args = parser.parse_args(argv)
 
-    from . import (bench_barebones, bench_cold_hot, bench_cost_perf,
-                   bench_exchange, bench_q5_scaling, bench_scaleup,
-                   bench_scan_pipeline, bench_storage_format,
+    from . import (bench_barebones, bench_cold_hot, bench_concurrency,
+                   bench_cost_perf, bench_exchange, bench_q5_scaling,
+                   bench_scaleup, bench_scan_pipeline, bench_storage_format,
                    bench_weak_scaling)
 
     suites = [
         ("storage_format(§2.2)", bench_storage_format.run),
         ("scan_pipeline(§2.2)", bench_scan_pipeline.run),
+        ("concurrency(serving)", bench_concurrency.run),
         ("barebones(Table1)", bench_barebones.run),
         ("exchange(Fig5,§3.4)", bench_exchange.run),
         ("q5_scaling(Fig6)", bench_q5_scaling.run),

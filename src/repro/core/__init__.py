@@ -7,12 +7,15 @@ Public API:
     from repro.core.builder import QueryBuilder, table
     from repro.core.optimizer import optimize, explain
     from repro.core.exchange import ICIExchange, HostExchange
+    from repro.core.scheduler import QueryScheduler, SchedulerConfig
 """
 
 from . import dtypes, expr, plan  # noqa: F401
 from .builder import QueryBuilder, SchemaError, table  # noqa: F401
 from .exchange import HostExchange, ICIExchange  # noqa: F401
 from .optimizer import OptimizerConfig, explain, optimize  # noqa: F401
+from .scheduler import (QueryHandle, QueryRejected,  # noqa: F401
+                        QueryScheduler, SchedulerConfig)
 from .session import Catalog, Session, TableSource  # noqa: F401
 from .streaming import MorselPrefetcher, ScanStats  # noqa: F401
 from .table import DeviceTable, concat_tables  # noqa: F401

@@ -94,7 +94,19 @@ def _key_family(t: dt.DType) -> str:
 
 
 class QueryBuilder:
-    """Immutable fluent wrapper around a ``PlanNode`` + its output schema."""
+    """Immutable fluent wrapper around a ``PlanNode`` + its output schema.
+
+    Every step validates against the propagated schema at build time and
+    returns a *new* builder; ``.plan`` exposes the logical IR at any point::
+
+        q = (session.table("lineitem")
+             .filter(col("l_quantity") < 5.0)
+             .group_by("l_returnflag")
+             .agg(n=("count", None)))
+        out = q.collect()                 # optimize + execute on this thread
+        handle = q.submit(priority=1)     # or: schedule it concurrently
+        out = handle.result()
+    """
 
     def __init__(self, plan: P.PlanNode, schema: Dict[str, dt.DType],
                  catalog, session=None):
@@ -108,6 +120,7 @@ class QueryBuilder:
     def scan(cls, catalog, table: str,
              columns: Optional[Sequence[str]] = None,
              session=None) -> "QueryBuilder":
+        """Root builder over a catalog table (all columns by default)."""
         try:
             src = catalog.get(table)
         except KeyError:
@@ -130,6 +143,8 @@ class QueryBuilder:
 
     # -- row-level steps ----------------------------------------------------
     def filter(self, predicate: Expr) -> "QueryBuilder":
+        """Keep rows satisfying a boolean expression:
+        ``.filter(col("l_quantity") < 24)``."""
         t = _check_expr(predicate, self.schema, "filter")
         if t.name != "bool":
             raise SchemaError(
@@ -165,6 +180,7 @@ class QueryBuilder:
 
     # -- aggregation --------------------------------------------------------
     def group_by(self, *keys: str) -> "GroupedBuilder":
+        """Start a grouped aggregation; follow with ``.agg(...)``."""
         for k in keys:
             if k not in self.schema:
                 raise SchemaError(
@@ -177,6 +193,7 @@ class QueryBuilder:
         return self.group_by().agg(**aggs)
 
     def distinct(self, *keys: str) -> "QueryBuilder":
+        """Unique rows over ``keys`` (all columns when omitted)."""
         keys = keys or tuple(self.schema)
         for k in keys:
             if k not in self.schema:
@@ -260,6 +277,8 @@ class QueryBuilder:
     # -- ordering / limiting ------------------------------------------------
     def order_by(self, *keys: str, descending: Optional[Sequence[bool]] = None,
                  limit: Optional[int] = None) -> "QueryBuilder":
+        """Sort by ``keys`` (per-key ``descending`` flags, optional
+        top-``limit``): ``.order_by("revenue", descending=[True])``."""
         for k in keys:
             if k not in self.schema:
                 raise SchemaError(
@@ -275,6 +294,7 @@ class QueryBuilder:
             self.schema)
 
     def limit(self, n: int) -> "QueryBuilder":
+        """Keep the first ``n`` rows (fuses into a preceding order_by)."""
         if n <= 0:
             raise SchemaError(f"limit: n must be positive, got {n}")
         plan = self.plan
@@ -284,10 +304,12 @@ class QueryBuilder:
 
     # -- terminal steps ------------------------------------------------------
     def to_plan(self) -> P.PlanNode:
+        """The logical ``PlanNode`` tree built so far (unoptimized)."""
         return self.plan
 
     def optimized(self, config: opt.OptimizerConfig = opt.DEFAULT_CONFIG
                   ) -> P.PlanNode:
+        """The plan after the rule-based optimizer pipeline."""
         return opt.optimize(self.plan, self._catalog, config=config)
 
     def explain(self) -> str:
@@ -305,6 +327,21 @@ class QueryBuilder:
         return self._session.execute(plan)
 
     execute = collect
+
+    def submit(self, priority: int = 0):
+        """Schedule this query concurrently; returns a ``QueryHandle``.
+
+        Routes through the session's ``QueryScheduler`` (admission control,
+        plan/result caches); requires a session-bound builder::
+
+            h = session.table("orders").limit(10).submit()
+            rows = h.result()
+        """
+        if self._session is None:
+            raise RuntimeError(
+                "submit() needs a session-bound builder; build via "
+                "session.table(...) or submit the plan to a session yourself")
+        return self._session.submit(self.plan, priority=priority)
 
     def __repr__(self):
         return (f"QueryBuilder[{_fmt_cols(self.schema)}]\n"

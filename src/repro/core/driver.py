@@ -32,6 +32,12 @@ from .table import DeviceTable, concat_tables
 
 @dataclasses.dataclass
 class ExecutionContext:
+    """Immutable per-query execution config (worker count, exchange,
+    batching, streaming knobs) snapshot from a ``Session``. One Driver is
+    built per query; the scheduler additionally clones any explicitly
+    configured exchange protocol so concurrent queries never share its
+    mutable stats."""
+
     catalog: "object"                       # repro.core.session.Catalog
     num_workers: int = 1
     exchange: Optional[ExchangeProtocol] = None
@@ -50,6 +56,7 @@ class ExecutionContext:
             self.exchange = ICIExchange(mesh=self.mesh)
 
     def worker_sharding(self):
+        """NamedSharding over the mesh's 'workers' axis (None off-mesh)."""
         if self.mesh is None:
             return None
         from jax.sharding import NamedSharding, PartitionSpec
@@ -94,6 +101,7 @@ class StreamingScan:
         self.pipe.ops.append(op)
 
     def batches(self) -> Iterator[DeviceTable]:
+        """Drain the prefetch queue through the fused per-morsel pipeline."""
         spent = 0.0
         self.pipe.open()
         for morsel in self.morsels:
@@ -110,6 +118,15 @@ class StreamingScan:
 
 
 class Driver:
+    """Executes one logical plan as streaming operator pipelines.
+
+    Plays the Presto coordinator + Velox drivers: walks the plan tree,
+    splits it into stages at exchange boundaries, and streams batches
+    through device operators. A Driver instance is single-query and
+    single-use; the scheduler creates one per admitted query (its
+    ``executor_stats`` are then reported on that query's handle).
+    """
+
     def __init__(self, ctx: ExecutionContext):
         self.ctx = ctx
         self.op_seconds: Dict[str, float] = {}
@@ -126,10 +143,13 @@ class Driver:
 
     # -- public API ----------------------------------------------------------
     def execute(self, node: P.PlanNode) -> DeviceTable:
+        """Run the plan; return the result as one device-resident table."""
         stream = self._stream(node)
         return self._materialize(stream)
 
     def collect(self, node: P.PlanNode) -> Dict[str, np.ndarray]:
+        """Run the plan; return valid rows as host numpy columns
+        (deduplicated to worker 0 for replicated results)."""
         stream = self._stream(node)
         table = self._materialize_table(stream.batches)
         if stream.dist == "replicated":

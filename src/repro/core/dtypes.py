@@ -38,13 +38,16 @@ class DType:
     # -- classification helpers -------------------------------------------
     @property
     def is_numeric(self) -> bool:
+        """True for plain int/float columns (arithmetic allowed)."""
         return self.name in ("int32", "int64", "float32", "float64")
 
     @property
     def is_string(self) -> bool:
+        """True for dict-encoded or fixed-width-bytes string columns."""
         return self.name in ("dict32", "bytes")
 
     def np_dtype(self) -> np.dtype:
+        """Numpy storage dtype for one element of this column."""
         return np.dtype(
             {
                 "int32": np.int32,
@@ -59,18 +62,22 @@ class DType:
         )
 
     def jnp_dtype(self):
+        """JAX dtype for one element of this column."""
         return jnp.dtype(self.np_dtype())
 
     def storage_shape(self, num_rows: int) -> tuple:
+        """Array shape for ``num_rows`` values ([N, W] for bytes)."""
         if self.name == "bytes":
             return (num_rows, self.width)
         return (num_rows,)
 
     def decode(self, code: int) -> str:
+        """dict32 code -> string (host-side dictionary lookup)."""
         assert self.name == "dict32" and self.dictionary is not None
         return self.dictionary[code]
 
     def encode(self, value: str) -> int:
+        """dict32 string -> code (host-side dictionary lookup)."""
         assert self.name == "dict32" and self.dictionary is not None
         return self.dictionary.index(value)
 
@@ -92,10 +99,12 @@ DATE32 = DType("date32")
 
 
 def dict32(values) -> DType:
+    """Dictionary-encoded string type over a fixed value domain."""
     return DType("dict32", dictionary=tuple(values))
 
 
 def bytes_(width: int) -> DType:
+    """Fixed-width byte-string type (uint8[N, width] storage)."""
     return DType("bytes", width=width)
 
 
@@ -108,6 +117,7 @@ def date_to_i32(iso: str) -> int:
 
 
 def i32_to_date(days: int) -> str:
+    """int32 days-since-epoch -> 'YYYY-MM-DD'."""
     return (_EPOCH + datetime.timedelta(days=int(days))).isoformat()
 
 
@@ -121,4 +131,5 @@ def encode_bytes(strings, width: int) -> np.ndarray:
 
 
 def decode_bytes(row: np.ndarray) -> str:
+    """One uint8 row -> python string (space padding stripped)."""
     return bytes(np.asarray(row, dtype=np.uint8)).decode("ascii").rstrip()

@@ -43,6 +43,9 @@ from .table import DeviceTable
 
 @dataclasses.dataclass
 class ExchangeStats:
+    """Counters for one exchange protocol instance (rounds, rows/bytes
+    moved, and -- for the host-staged baseline -- bytes through host)."""
+
     rounds: int = 0
     rows_moved: int = 0
     bytes_moved: int = 0            # payload bytes that crossed the exchange
@@ -50,6 +53,7 @@ class ExchangeStats:
     seconds: float = 0.0
 
     def reset(self):
+        """Zero all counters (benchmarks reuse one protocol instance)."""
         self.rounds = self.rows_moved = self.bytes_moved = 0
         self.host_staged_bytes = 0
         self.seconds = 0.0
@@ -133,6 +137,10 @@ def _partition_layout_table(table: DeviceTable, key_names, num_workers: int,
 
 
 class ExchangeProtocol:
+    """Contract for moving worker-stacked tables between workers; the two
+    implementations below mirror the paper's UcxExchange (device-native)
+    vs HttpExchange (host-staged) contrast."""
+
     name = "exchange"
 
     def __init__(self):
@@ -140,10 +148,18 @@ class ExchangeProtocol:
 
     def repartition(self, table: DeviceTable, key_names: Sequence[str],
                     num_workers: int) -> DeviceTable:
+        """Hash-partition rows on ``key_names`` so equal keys land on the
+        same worker (the shuffle between join/aggregation stages)."""
         raise NotImplementedError
 
     def broadcast(self, table: DeviceTable, num_workers: int) -> DeviceTable:
+        """Replicate every worker's valid rows to all workers."""
         raise NotImplementedError
+
+    def clone(self) -> "ExchangeProtocol":
+        """Fresh instance with the same configuration but zeroed stats
+        (the scheduler gives each concurrent query its own clone)."""
+        return type(self)()
 
     # -- shared flow control ------------------------------------------------
     def _choose_part_cap(self, counts: np.ndarray) -> int:
@@ -167,6 +183,10 @@ class ICIExchange(ExchangeProtocol):
         super().__init__()
         self.mesh = mesh
         self.axis = axis
+
+    def clone(self) -> "ICIExchange":
+        """Fresh ICI protocol on the same mesh/axis, zeroed stats."""
+        return type(self)(self.mesh, self.axis)
 
     def _constrain(self, tree):
         if self.mesh is None:
@@ -242,6 +262,10 @@ class HostExchange(ExchangeProtocol):
     def __init__(self, page_rows: int = 4096):
         super().__init__()
         self.page_rows = page_rows
+
+    def clone(self) -> "HostExchange":
+        """Fresh host-staged protocol at the same page size, zeroed stats."""
+        return type(self)(self.page_rows)
 
     def _to_pages(self, cols: dict, validity: np.ndarray) -> List[bytes]:
         n = validity.shape[0]

@@ -51,9 +51,11 @@ class Expr:
         return id(self)
 
     def isin(self, values: Sequence[Any]) -> "Expr":
+        """SQL ``IN``: true where the value equals any of ``values``."""
         return IsIn(self, tuple(values))
 
     def between(self, lo, hi) -> "Expr":
+        """SQL ``BETWEEN``: inclusive range predicate."""
         return (self >= lo) & (self <= hi)
 
     def contains(self, *parts: str) -> "Expr":
@@ -61,19 +63,25 @@ class Expr:
         return BytesMatch(self, tuple(parts), "contains")
 
     def startswith(self, prefix: str) -> "Expr":
+        """LIKE 'prefix%' over a bytes column."""
         return BytesMatch(self, (prefix,), "startswith")
 
     def endswith(self, suffix: str) -> "Expr":
+        """LIKE '%suffix' over a (space-padded) bytes column."""
         return BytesMatch(self, (suffix,), "endswith")
 
     # -- evaluation ----------------------------------------------------------
     def evaluate(self, table: DeviceTable) -> jax.Array:
+        """Value of this expression over a batch (one traced jnp array;
+        XLA fuses the whole tree into a single kernel)."""
         raise NotImplementedError
 
     def out_dtype(self, schema) -> dt.DType:
+        """Result dtype given an input ``name -> DType`` schema."""
         raise NotImplementedError
 
     def references(self) -> set:
+        """Set of column names this expression reads."""
         raise NotImplementedError
 
 
@@ -83,6 +91,8 @@ def _wrap(v) -> "Expr":
 
 @dataclasses.dataclass(eq=False)
 class ColumnRef(Expr):
+    """Reference to an input column by name (``col("l_quantity")``)."""
+
     name: str
 
     def evaluate(self, table):
@@ -100,6 +110,8 @@ class ColumnRef(Expr):
 
 @dataclasses.dataclass(eq=False)
 class Literal(Expr):
+    """Constant scalar; dtype inferred from the python value if absent."""
+
     value: Any
     dtype: dt.DType = None  # inferred if None
 
@@ -136,6 +148,8 @@ _BOOLOP = {"and": jnp.logical_and, "or": jnp.logical_or}
 
 @dataclasses.dataclass(eq=False)
 class BinaryOp(Expr):
+    """Arithmetic/comparison/boolean operator over two subexpressions."""
+
     op: str
     lhs: Expr
     rhs: Expr
@@ -172,6 +186,8 @@ class BinaryOp(Expr):
 
 @dataclasses.dataclass(eq=False)
 class UnaryOp(Expr):
+    """``not`` / ``neg`` over one subexpression."""
+
     op: str
     operand: Expr
 
@@ -188,6 +204,8 @@ class UnaryOp(Expr):
 
 @dataclasses.dataclass(eq=False)
 class IsIn(Expr):
+    """Membership against a small literal set (SQL ``IN``)."""
+
     operand: Expr
     values: Tuple[Any, ...]
 
@@ -321,20 +339,25 @@ class PrefixCode(Expr):
 
 
 def year(e: Expr) -> Year:
+    """EXTRACT(YEAR) from a date32 expression."""
     return Year(e)
 
 
 def prefix_code(e: Expr, n: int) -> PrefixCode:
+    """Integer decode of the first ``n`` bytes of a bytes column."""
     return PrefixCode(e, n)
 
 
 def col(name: str) -> ColumnRef:
+    """Reference a column by name: ``col("l_quantity") * 2.0``."""
     return ColumnRef(name)
 
 
 def lit(value, dtype: dt.DType = None) -> Literal:
+    """Literal scalar (dtype inferred from the python type if omitted)."""
     return Literal(value, dtype)
 
 
 def date_lit(iso: str) -> Literal:
+    """Date literal from 'YYYY-MM-DD', as int32 days since epoch."""
     return Literal(dt.date_to_i32(iso), dt.DATE32)

@@ -68,16 +68,22 @@ def _is_stacked(obj) -> bool:
 # ---------------------------------------------------------------------------
 
 class Operator:
+    """Velox streaming-operator contract (see module docstring): ``open``,
+    then ``add_input`` per batch, then ``finish`` to flush blocking state."""
+
     name = "operator"
     is_device = True     # has a "cuDF version" (device implementation)
 
     def open(self) -> None:
+        """Acquire per-query state; called once before any input."""
         pass
 
     def add_input(self, batch: DeviceTable) -> List[DeviceTable]:
+        """Consume one batch, return 0..n output batches (never blocks)."""
         raise NotImplementedError
 
     def finish(self) -> List[DeviceTable]:
+        """Flush accumulated state at end of input (blocking operators)."""
         return []
 
 
@@ -414,9 +420,11 @@ class HashJoin(Operator):
 
     # build side is fed by the driver before probing starts
     def add_build(self, batch: DeviceTable):
+        """Accumulate one build-side batch (device-resident)."""
         self._build_batches.append(batch)
 
     def seal_build(self):
+        """Concatenate and sort the build side; probing may start after."""
         assert self._build_batches, "join build side is empty"
         build = concat_tables(self._build_batches)
         self._build_batches = []
@@ -443,6 +451,7 @@ def _compact(table: DeviceTable):
 
 
 def compact_table(table: DeviceTable) -> DeviceTable:
+    """Stream-compact a (possibly worker-stacked) table (paper 3.3.2)."""
     return _compact(table)
 
 
@@ -468,6 +477,9 @@ def _order_by(table: DeviceTable, keys, descending, limit):
 
 
 class OrderBy(Operator):
+    """Blocking global sort (optional top-``limit``); accumulates batches
+    in device memory and sorts once at ``finish``."""
+
     name = "OrderBy"
 
     def __init__(self, keys: Sequence[str], descending: Sequence[bool] = None,
@@ -491,6 +503,8 @@ class OrderBy(Operator):
 
 
 class Limit(Operator):
+    """First ``n`` valid rows (blocking: concatenates, then truncates)."""
+
     name = "Limit"
 
     def __init__(self, n: int):
@@ -535,6 +549,7 @@ class ScalarBroadcast(Operator):
         self._scalar: Optional[DeviceTable] = None
 
     def set_scalar(self, table: DeviceTable):
+        """Provide the materialized 1-row table to attach."""
         self._scalar = table
 
     def add_input(self, batch):

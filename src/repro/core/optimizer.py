@@ -428,6 +428,86 @@ def derive_capacities(node: P.PlanNode, catalog,
 
 
 # ---------------------------------------------------------------------------
+# device-memory footprint estimation (admission control input)
+# ---------------------------------------------------------------------------
+
+def row_width(schema: Dict[str, dt.DType]) -> int:
+    """Bytes per row of a schema (+1 byte/row for the validity mask)."""
+    width = 1
+    for d in schema.values():
+        itemsize = int(d.np_dtype().itemsize)
+        width += itemsize * d.width if d.name == "bytes" else itemsize
+    return width
+
+
+def estimate_memory(plan: P.PlanNode, catalog, num_workers: int = 1,
+                    batch_rows: int = 8192, prefetch_depth: int = 2) -> int:
+    """Estimated peak device-memory footprint of executing ``plan``, in bytes.
+
+    The scheduler admits queries against a device-memory budget using this
+    estimate (the paper's coordinator multiplexes queries under the GPU
+    memory budget). The model sums the device-resident state each node pins:
+
+    * ``TableScan``     -- ``prefetch_depth + 1`` in-flight worker-stacked
+                           morsels (the bounded prefetch queue plus the one
+                           computing), capped at the table's total size.
+    * ``Aggregation`` / ``Distinct``
+                        -- ``max_groups`` static hash-table slots per worker
+                           (doubled when the two-phase lowering materializes
+                           partials for the exchange).
+    * ``Join``          -- the materialized build side (replicated to every
+                           worker under a broadcast distribution) plus one
+                           ``max_matches``-expanded probe output batch.
+    * ``OrderBy`` / ``Limit`` / ``Exchange``
+                        -- the child materialized (these are blocking).
+
+    Like the capacity hints, this is an upper-bound-flavored estimate: it
+    never prices real work at zero, so admission errs toward queueing
+    rather than oversubscribing device memory.
+    """
+    total = 0
+    w = max(num_workers, 1)
+
+    def bounded_rows(node: P.PlanNode) -> int:
+        try:
+            return min(row_bound(node, catalog), 1 << 40)
+        except TypeError:
+            return 1 << 20
+
+    def visit(node: P.PlanNode) -> None:
+        nonlocal total
+        if isinstance(node, P.TableScan):
+            width = row_width(infer_schema(node, catalog))
+            in_flight = batch_rows * w * (prefetch_depth + 1)
+            total_rows = bounded_rows(node)
+            total += width * min(in_flight, max(total_rows, batch_rows))
+        elif isinstance(node, P.InMemorySource):
+            width = row_width(infer_schema(node, catalog))
+            total += width * bounded_rows(node)
+        elif isinstance(node, (P.Aggregation, P.Distinct)):
+            width = row_width(infer_schema(node, catalog))
+            phases = 2 if (isinstance(node, P.Aggregation)
+                           and node.mode in ("auto", "two_phase")
+                           and w > 1) else 1
+            total += width * node.max_groups * w * phases
+        elif isinstance(node, P.Join):
+            build_width = row_width(infer_schema(node.build, catalog))
+            build_rows = bounded_rows(node.build)
+            repl = w if node.distribution == "broadcast" else 1
+            total += build_width * build_rows * repl
+            out_width = row_width(infer_schema(node, catalog))
+            total += out_width * batch_rows * max(node.max_matches, 1) * w
+        elif isinstance(node, (P.OrderBy, P.Limit, P.Exchange)):
+            width = row_width(infer_schema(node.children()[0], catalog))
+            total += width * bounded_rows(node.children()[0])
+        for c in node.children():
+            visit(c)
+
+    visit(plan)
+    return total
+
+
+# ---------------------------------------------------------------------------
 # pipeline
 # ---------------------------------------------------------------------------
 

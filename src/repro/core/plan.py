@@ -2,13 +2,19 @@
 
 A plan is a tree of PlanNodes. The Presto coordinator's role (split the plan
 into stages at exchange boundaries, hand fragments to workers) is played by
-``driver.run``; the "driver adaptation" step (substitute device operators,
-insert host/device conversions) is played by the planner in ``planner.py``.
+``driver.Driver``; the "driver adaptation" step (push predicates into scans,
+choose join distributions, derive operator capacities) is played by the rule
+pipeline in ``optimizer.py``.
+
+``fingerprint`` produces a canonical string key for a plan tree — two
+structurally identical queries fingerprint identically regardless of
+list/tuple spelling — which the scheduler's plan and result caches key on.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .expr import Expr
@@ -17,6 +23,8 @@ from .operators import AggSpec
 
 @dataclasses.dataclass
 class PlanNode:
+    """Base of the logical-plan tree; ``children()`` lists subtrees."""
+
     def children(self) -> List["PlanNode"]:
         return []
 
@@ -33,6 +41,9 @@ class TableScan(PlanNode):
 
 @dataclasses.dataclass
 class Filter(PlanNode):
+    """Keep rows where ``predicate`` holds (marks the rest invalid;
+    ``compact=True`` additionally stream-compacts survivors, §3.3.2)."""
+
     child: PlanNode
     predicate: Expr
     compact: bool = False
@@ -43,6 +54,8 @@ class Filter(PlanNode):
 
 @dataclasses.dataclass
 class Project(PlanNode):
+    """Compute output columns as named expressions over the child."""
+
     child: PlanNode
     projections: Sequence[Tuple[str, Expr]]
 
@@ -65,6 +78,8 @@ class Aggregation(PlanNode):
 
 @dataclasses.dataclass
 class Distinct(PlanNode):
+    """Unique rows over ``keys`` (grouped dedup, static capacity)."""
+
     child: PlanNode
     keys: Sequence[str]
     max_groups: int = 4096
@@ -97,6 +112,8 @@ class Join(PlanNode):
 
 @dataclasses.dataclass
 class OrderBy(PlanNode):
+    """Global sort (optionally top-``limit``); blocking operator."""
+
     child: PlanNode
     keys: Sequence[str]
     descending: Optional[Sequence[bool]] = None
@@ -108,6 +125,8 @@ class OrderBy(PlanNode):
 
 @dataclasses.dataclass
 class Limit(PlanNode):
+    """First ``n`` valid rows of the child."""
+
     child: PlanNode
     n: int
 
@@ -142,3 +161,53 @@ class InMemorySource(PlanNode):
     name: str
     data: Dict[str, Any]
     schema: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# canonical plan keys
+# ---------------------------------------------------------------------------
+
+def _canon(v: Any) -> str:
+    """Canonical string for a plan-node field value.
+
+    Normalizes list/tuple spelling (builders produce lists, hand-written
+    plans often tuples), sorts dict keys, and digests numpy buffers so an
+    ``InMemorySource`` keys on its actual data, not its object identity.
+    """
+    if isinstance(v, PlanNode):
+        return fingerprint(v)
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        inner = ",".join(
+            f"{f.name}={_canon(getattr(v, f.name))}"
+            for f in dataclasses.fields(v))
+        return f"{type(v).__name__}({inner})"
+    if isinstance(v, (list, tuple)):
+        return "[" + ",".join(_canon(x) for x in v) + "]"
+    if isinstance(v, dict):
+        items = sorted(v.items(), key=lambda kv: str(kv[0]))
+        return "{" + ",".join(f"{k}:{_canon(x)}" for k, x in items) + "}"
+    if hasattr(v, "tobytes") and hasattr(v, "dtype"):      # numpy array
+        h = hashlib.sha1()
+        h.update(str(v.dtype).encode())
+        h.update(str(getattr(v, "shape", ())).encode())
+        h.update(v.tobytes())
+        return f"ndarray:{h.hexdigest()}"
+    return repr(v)
+
+
+def fingerprint(node: PlanNode) -> str:
+    """Canonical cache key for a logical plan tree.
+
+    Structurally identical plans (same node types, expressions, columns,
+    capacities) produce identical fingerprints; the scheduler's plan cache
+    and result cache both key on this::
+
+        >>> a = TableScan("lineitem", columns=["l_quantity"])
+        >>> b = TableScan("lineitem", columns=("l_quantity",))
+        >>> fingerprint(a) == fingerprint(b)
+        True
+    """
+    inner = ",".join(
+        f"{f.name}={_canon(getattr(node, f.name))}"
+        for f in dataclasses.fields(node))
+    return f"{type(node).__name__}({inner})"

@@ -124,6 +124,9 @@ def lexsort(keys: List[jax.Array], validity: jax.Array,
 # ---------------------------------------------------------------------------
 
 class Groups(NamedTuple):
+    """Output of ``group_rows``: permutation, dense group ids, count,
+    representative row per group, and the group-slot validity mask."""
+
     order: jax.Array        # row permutation, valid rows first, grouped
     gids: jax.Array         # group id per *sorted* row; invalid -> max_groups
     num_groups: jax.Array   # scalar
@@ -201,18 +204,24 @@ def _extreme(dtype, sign):
 # ---------------------------------------------------------------------------
 
 class BuildTable(NamedTuple):
+    """Sorted join build side (keys, permutation, original validity)."""
+
     sorted_keys: jax.Array   # int32[B], invalid rows pushed to +inf end
     perm: jax.Array          # int32[B] permutation into original build rows
     validity: jax.Array      # original build validity
 
 
 def join_build(keys: jax.Array, validity: jax.Array) -> BuildTable:
+    """Sort build keys (invalid rows to the end) for searchsorted probes."""
     k = jnp.where(validity, keys, INT32_MAX)
     perm = jnp.argsort(k, stable=True).astype(jnp.int32)
     return BuildTable(jnp.take(k, perm), perm, validity)
 
 
 class ProbeResult(NamedTuple):
+    """Expanded probe output: per output row the matched build/probe
+    indices + liveness, and per probe row its match count."""
+
     build_idx: jax.Array     # int32[P*M] original build row per output row
     probe_idx: jax.Array     # int32[P*M] probe row per output row
     valid: jax.Array         # bool[P*M]

@@ -1,0 +1,464 @@
+"""Concurrent query scheduler: admission control + plan/result caching.
+
+The paper's Presto integration is a *serving* system: the coordinator admits
+many concurrent queries and the GPU workers multiplex them under a fixed
+device-memory budget. This module is that layer for the repro engine — it
+turns the one-query-at-a-time ``Session`` into a serving engine:
+
+* **Admission control** — every query's peak device-memory footprint is
+  estimated from its optimized plan (``optimizer.estimate_memory``: scan
+  prefetch windows, ``max_groups``/``max_matches`` capacities, join build
+  sides). Queries are admitted only while the sum of in-flight estimates
+  fits ``SchedulerConfig.memory_budget``; the rest wait in a bounded
+  priority queue. A query that could never fit (estimate > total budget) or
+  arrives when the queue is full is rejected immediately (``QueryRejected``)
+  so callers get backpressure instead of unbounded latency.
+
+* **Interleaved execution** — admitted queries run on a pool of
+  ``max_concurrency`` worker threads, each driving its own ``Driver``.
+  Because every scan goes through ``MorselPrefetcher`` (a background
+  storage-read + device-put thread per scan), the morsel pipelines of
+  different queries overlap: query A's operators compute while query B's
+  scan reads from storage.
+
+* **Plan cache** — optimization is skipped for repeated query *shapes*:
+  the canonicalized logical plan (``plan.fingerprint``) maps to its
+  optimized tree. Entries snapshot the versions of every referenced table
+  (optimizer decisions depend on catalog stats) and are invalidated when a
+  table is re-registered.
+
+* **Result cache** — a bounded LRU from plan fingerprint to collected
+  result, also version-snapshotted: re-registering any referenced table
+  invalidates the entry (the tests cover exactly this). Hits complete
+  without reserving memory or occupying a worker. Identical queries
+  submitted *while one is still in flight* coalesce onto the running
+  handle instead of executing twice.
+
+Entry points live on ``Session``: ``submit()`` returns a ``QueryHandle``
+future, ``gather()`` awaits many, ``run()`` is the synchronous wrapper.
+``examples/serve_queries.py`` demonstrates N concurrent TPC-H clients;
+``benchmarks/bench_concurrency.py`` measures throughput and latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import threading
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+from . import plan as P
+from .driver import Driver
+from .optimizer import estimate_memory, optimize
+
+
+class QueryRejected(RuntimeError):
+    """Admission control refused the query (over budget or queue full)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Knobs for admission control and the two caches.
+
+    The defaults suit a CPU-JAX dev box; a real deployment sets
+    ``memory_budget`` to the device's free HBM and ``max_concurrency`` to
+    the number of independent query pipelines the device can overlap.
+    """
+
+    # total device-memory budget admitted queries may collectively pin
+    memory_budget: int = 1 << 30
+    # worker threads driving admitted queries (concurrent pipelines)
+    max_concurrency: int = 8
+    # bounded wait queue: submits beyond this are rejected (backpressure)
+    max_queue: int = 64
+    # LRU capacities for the two caches (entries, not bytes)
+    plan_cache_size: int = 64
+    result_cache_size: int = 64
+    # serve repeated identical queries from the result cache
+    cache_results: bool = True
+    # anti-starvation: after the queue head has been passed over this many
+    # times for smaller queries, backfilling stops until the head fits
+    max_head_skips: int = 16
+
+
+class QueryHandle:
+    """Future-style handle for one submitted query.
+
+    ``result()`` blocks until the query finishes and returns the collected
+    numpy dict (or re-raises the query's error / rejection). Timing fields
+    (``submitted_at``/``started_at``/``finished_at``, absent until reached)
+    let callers derive queue wait and run time; ``cache_hit`` says the
+    result came from the result cache.
+    """
+
+    def __init__(self, query_id: int, plan: P.PlanNode, priority: int,
+                 estimate: int):
+        self.query_id = query_id
+        self.plan = plan
+        self.priority = priority
+        self.estimate = estimate
+        self.cache_hit = False
+        self.plan_cache_hit = False
+        self._queue_skips = 0          # times passed over by backfilling
+        self._versions: tuple = ()     # admission-time catalog snapshot
+        self.submitted_at = time.perf_counter()
+        self.started_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self.executor_stats: Dict[str, object] = {}
+        self._done = threading.Event()
+        self._result: Optional[Dict] = None
+        self._error: Optional[BaseException] = None
+
+    # -- completion (scheduler side) ----------------------------------------
+    def _complete(self, result=None, error=None) -> None:
+        self._result, self._error = result, error
+        self.finished_at = time.perf_counter()
+        self._done.set()
+
+    # -- consumption (client side) ------------------------------------------
+    def done(self) -> bool:
+        """True once the query finished (successfully or not)."""
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Dict:
+        """Block until finished; return the collected columns dict.
+
+        Re-raises the query's exception on failure; raises ``TimeoutError``
+        if ``timeout`` (seconds) elapses first. The returned arrays may be
+        shared with the result cache and coalesced handles — treat them as
+        read-only.
+        """
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"query {self.query_id} still running after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit-to-finish seconds (None while still running)."""
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+class _VersionedLRU:
+    """Bounded LRU whose entries carry a catalog-version snapshot.
+
+    A lookup re-validates the snapshot against the live catalog; any bumped
+    table version evicts the entry (re-registered table == new data).
+    Internally locked: client threads get/put concurrently with workers.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = max(int(capacity), 0)
+        self._od: "OrderedDict[str, Tuple[tuple, object]]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str, catalog):
+        with self._lock:
+            entry = self._od.get(key)
+            if entry is not None:
+                versions, value = entry
+                if catalog.versions([n for n, _ in versions]) == versions:
+                    self._od.move_to_end(key)
+                    self.hits += 1
+                    return value
+                del self._od[key]       # stale: a table was re-registered
+            self.misses += 1
+            return None
+
+    def put(self, key: str, versions: tuple, value) -> None:
+        if self.capacity == 0:
+            return
+        with self._lock:
+            self._od[key] = (versions, value)
+            self._od.move_to_end(key)
+            while len(self._od) > self.capacity:
+                self._od.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._od)
+
+
+def referenced_tables(plan: P.PlanNode) -> List[str]:
+    """Catalog tables a plan reads (cache-invalidation scope)."""
+    names: List[str] = []
+
+    def visit(node: P.PlanNode) -> None:
+        if isinstance(node, P.TableScan):
+            names.append(node.table)
+        for c in node.children():
+            visit(c)
+
+    visit(plan)
+    return sorted(set(names))
+
+
+class QueryScheduler:
+    """Admits, caches, and concurrently executes queries for one Session.
+
+    Example (synchronous clients are threads; the scheduler interleaves
+    their pipelines)::
+
+        from repro.core import Session
+        from repro.core.scheduler import SchedulerConfig
+        from repro.tpch import dbgen, queries
+
+        session = Session(dbgen.load_catalog(sf=0.002))
+        session.scheduler_config = SchedulerConfig(memory_budget=256 << 20)
+        handles = [session.submit(queries.build_query(q, session.catalog))
+                   for q in (1, 6, 14)]
+        results = session.gather(*handles)   # list of numpy dicts
+
+    Thread-safe; one instance serves arbitrarily many client threads.
+    """
+
+    def __init__(self, session, config: Optional[SchedulerConfig] = None):
+        self.session = session
+        self.config = config or SchedulerConfig()
+        self.plan_cache = _VersionedLRU(self.config.plan_cache_size)
+        self.result_cache = _VersionedLRU(
+            self.config.result_cache_size if self.config.cache_results else 0)
+        self._cond = threading.Condition()
+        self._pending: List[Tuple[int, int, QueryHandle]] = []   # heap
+        self._mem_in_use = 0
+        self._running = 0
+        self._closed = False
+        self._seq = itertools.count()
+        self._ids = itertools.count(1)
+        self._threads: List[threading.Thread] = []
+        # in-flight coalescing: fingerprint -> queued/running handle, so N
+        # simultaneous identical queries execute once and share the result
+        self._inflight: Dict[str, QueryHandle] = {}
+        # served-query counters (exposed via stats())
+        self.completed = 0
+        self.failed = 0
+        self.rejected = 0
+        self.coalesced = 0
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, plan: P.PlanNode, priority: int = 0) -> QueryHandle:
+        """Admit ``plan`` for execution; returns a ``QueryHandle``.
+
+        Raises ``QueryRejected`` when the query could never fit the memory
+        budget, or when the wait queue is full (backpressure). Higher
+        ``priority`` dequeues first; ties run in submission order. A
+        duplicate of an in-flight query coalesces onto its handle (raising
+        that handle's queue priority if the duplicate's is higher).
+        """
+        key = P.fingerprint(plan)
+        # result cache first: a hit skips optimization entirely
+        cached = self.result_cache.get(key, self.session.catalog)
+        if cached is not None:
+            handle = QueryHandle(next(self._ids), plan, priority, 0)
+            handle.cache_hit = True
+            handle.started_at = time.perf_counter()
+            handle._complete(result=cached)
+            with self._cond:
+                self.completed += 1
+            return handle
+
+        optimized, plan_hit = self._optimized(plan, key)
+        est = estimate_memory(
+            optimized, self.session.catalog,
+            num_workers=self.session.num_workers,
+            batch_rows=self.session.batch_rows,
+            prefetch_depth=self.session.prefetch_depth)
+        handle = QueryHandle(next(self._ids), optimized, priority, est)
+        handle.plan_cache_hit = plan_hit
+        # version snapshot taken NOW: if a table is re-registered while the
+        # query runs, the snapshot no longer matches at the next lookup and
+        # the (stale) result is never served from cache
+        handle._versions = self.session.catalog.versions(
+            referenced_tables(optimized))
+
+        if est > self.config.memory_budget:
+            with self._cond:
+                self.rejected += 1
+            raise QueryRejected(
+                f"query footprint ~{est} B exceeds the scheduler's "
+                f"memory budget of {self.config.memory_budget} B; "
+                f"raise SchedulerConfig.memory_budget or shrink the query")
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            if self.config.cache_results:
+                existing = self._inflight.get(key)
+                if (existing is not None and not existing.done()
+                        and self.session.catalog.versions(
+                            [n for n, _ in existing._versions])
+                        == existing._versions):
+                    # identical query already queued/running against
+                    # still-current table versions: share its handle
+                    # instead of executing twice (request coalescing);
+                    # a more urgent duplicate promotes the queued entry.
+                    # A version mismatch (table re-registered since the
+                    # in-flight query was admitted) falls through to a
+                    # fresh execution — coalescing never serves stale data.
+                    self.coalesced += 1
+                    if priority > existing.priority:
+                        existing.priority = priority
+                        for i, (_, seq, h) in enumerate(self._pending):
+                            if h is existing:
+                                self._pending[i] = (-priority, seq, h)
+                                heapq.heapify(self._pending)
+                                break
+                    return existing
+            if len(self._pending) >= self.config.max_queue:
+                self.rejected += 1
+                raise QueryRejected(
+                    f"wait queue full ({self.config.max_queue} queries); "
+                    f"retry later (backpressure)")
+            handle._result_key = key
+            self._inflight[key] = handle
+            heapq.heappush(self._pending,
+                           (-priority, next(self._seq), handle))
+            self._ensure_workers()
+            self._cond.notify_all()
+        return handle
+
+    def gather(self, *handles: QueryHandle) -> List[Dict]:
+        """Wait for every handle; returns results in argument order.
+
+        Re-raises the first failed query's exception (after all have
+        finished, so no work is silently abandoned).
+        """
+        for h in handles:
+            h._done.wait()
+        return [h.result() for h in handles]
+
+    def run(self, plan: P.PlanNode, priority: int = 0) -> Dict:
+        """Synchronous submit-and-wait (the serving path for one query)."""
+        return self.submit(plan, priority).result()
+
+    def stats(self) -> Dict[str, int]:
+        """Served/rejected counters and cache hit/miss totals."""
+        with self._cond:
+            return {
+                "completed": self.completed,
+                "failed": self.failed,
+                "rejected": self.rejected,
+                "coalesced": self.coalesced,
+                "queued": len(self._pending),
+                "running": self._running,
+                "mem_in_use": self._mem_in_use,
+                "plan_cache_hits": self.plan_cache.hits,
+                "plan_cache_misses": self.plan_cache.misses,
+                "result_cache_hits": self.result_cache.hits,
+                "result_cache_misses": self.result_cache.misses,
+            }
+
+    def close(self, wait: bool = True) -> None:
+        """Stop accepting queries; optionally wait for workers to drain."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        if wait:
+            for t in self._threads:
+                t.join(timeout=30.0)
+
+    # -- internals ----------------------------------------------------------
+    def _optimized(self, plan: P.PlanNode,
+                   raw_key: str) -> Tuple[P.PlanNode, bool]:
+        """Optimized plan via the plan cache (keyed on the raw tree's
+        already-computed fingerprint). Versions are snapshot *before*
+        optimization, which reads catalog statistics."""
+        key = "opt:" + raw_key
+        cached = self.plan_cache.get(key, self.session.catalog)
+        if cached is not None:
+            return cached, True
+        versions = self.session.catalog.versions(referenced_tables(plan))
+        optimized = optimize(plan, self.session.catalog)
+        self.plan_cache.put(key, versions, optimized)
+        return optimized, False
+
+    def _ensure_workers(self) -> None:
+        """Lazily grow the worker pool up to ``max_concurrency`` (held lock)."""
+        alive = sum(1 for t in self._threads if t.is_alive())
+        want = min(self.config.max_concurrency,
+                   len(self._pending) + self._running)
+        for i in range(alive, want):
+            t = threading.Thread(target=self._worker, daemon=True,
+                                 name=f"query-sched-{i}")
+            t.start()
+            self._threads.append(t)
+
+    def _pick(self) -> Optional[QueryHandle]:
+        """Highest-priority pending query that fits the remaining budget
+        (held lock). Skipping an over-budget head is deadlock-free: when
+        nothing is running the full budget is free, and submit() already
+        rejected anything larger than that. To prevent a big head being
+        starved by a stream of small backfills, a head that has been
+        skipped ``max_head_skips`` times blocks further backfilling until
+        it fits (the budget drains as running queries finish)."""
+        if not self._pending:
+            return None
+        remaining = self.config.memory_budget - self._mem_in_use
+        head = min(self._pending)               # heap order: priority, FIFO
+        if head[2].estimate <= remaining:
+            entry = head
+        else:
+            if head[2]._queue_skips >= self.config.max_head_skips:
+                return None                     # drain until the head fits
+            fits = [e for e in self._pending if e[2].estimate <= remaining]
+            if not fits:
+                return None
+            # the head is genuinely passed over for a smaller query: only
+            # real backfills age it, not idle worker polls
+            head[2]._queue_skips += 1
+            entry = min(fits)
+        self._pending.remove(entry)
+        heapq.heapify(self._pending)
+        return entry[2]
+
+    def _worker(self) -> None:
+        while True:
+            with self._cond:
+                handle = self._pick()
+                while handle is None:
+                    if self._closed and not self._pending:
+                        return
+                    self._cond.wait(timeout=0.1)
+                    handle = self._pick()
+                self._mem_in_use += handle.estimate
+                self._running += 1
+            try:
+                self._execute(handle)
+            finally:
+                with self._cond:
+                    self._mem_in_use -= handle.estimate
+                    self._running -= 1
+                    if self._inflight.get(handle._result_key) is handle:
+                        del self._inflight[handle._result_key]
+                    self._cond.notify_all()
+
+    def _execute(self, handle: QueryHandle) -> None:
+        """Run one admitted query on this worker thread's own Driver."""
+        handle.started_at = time.perf_counter()
+        try:
+            ctx = self.session.context()
+            if self.session.exchange is not None:
+                # don't share one protocol's mutable stats across
+                # concurrent queries: each Driver gets a fresh clone
+                ctx = dataclasses.replace(
+                    ctx, exchange=self.session.exchange.clone())
+            driver = Driver(ctx)
+            result = driver.collect(handle.plan)
+            handle.executor_stats = driver.executor_stats()
+            self.result_cache.put(handle._result_key, handle._versions,
+                                  result)
+            handle._complete(result=result)
+            with self._cond:
+                self.completed += 1
+        except BaseException as exc:  # noqa: BLE001 -- delivered via handle
+            handle._complete(error=exc)
+            with self._cond:
+                self.failed += 1

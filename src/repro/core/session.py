@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from typing import Dict, Iterator, Optional
 
 import numpy as np
@@ -22,6 +23,15 @@ from .table import DeviceTable
 
 
 class TableSource:
+    """Abstract storage backend for one catalog table.
+
+    Backends implement ``_host_morsels`` (pure host-side reads) and
+    ``num_rows``; the shared ``scan``/``stream`` wrappers handle device
+    placement. Implementations: ``InMemoryTable`` (numpy), and the chunked
+    file formats ``storage.colchunk.ColumnChunkTable`` /
+    ``storage.paged.PagedTableSource`` (both with zone-map skipping).
+    """
+
     name: str
     schema: dict
     # catalog statistics for the optimizer: column sets that uniquely
@@ -40,7 +50,15 @@ class TableSource:
              filter_expr=None,
              stats: Optional[ScanStats] = None) -> Iterator[DeviceTable]:
         """Synchronous scan: read + device-put inline on the caller's thread
-        (the materialize-then-run baseline the paper starts from)."""
+        (the materialize-then-run baseline the paper starts from).
+
+        Yields worker-stacked ``DeviceTable`` batches::
+
+            src = session.catalog.get("lineitem")
+            for batch in src.scan(num_workers=1, columns=["l_quantity"],
+                                  batch_rows=4096):
+                print(batch.validity.shape)     # [W, cap]
+        """
         for morsel in self._host_morsels(num_workers, columns, batch_rows,
                                          filter_expr, stats=stats):
             if stats is not None:
@@ -54,7 +72,15 @@ class TableSource:
         """Asynchronous scan: a background thread reads morsel N+1 from
         storage and transfers it to the device while morsel N computes
         (double-buffered at ``prefetch_depth``). Returns an iterator of
-        device morsels; counters accumulate into ``stats``.
+        device morsels; counters accumulate into ``stats``::
+
+            from repro.core.streaming import ScanStats
+            stats = ScanStats()
+            src = session.catalog.get("lineitem")
+            for batch in src.stream(num_workers=1, columns=None,
+                                    batch_rows=4096, stats=stats):
+                pass                            # compute overlaps next read
+            print(stats.prefetch_overlap)       # fraction of I/O hidden
 
         Sources that predate the morsel API (override ``scan`` only, not
         ``_host_morsels``) are still prefetched: their device batches feed
@@ -69,6 +95,7 @@ class TableSource:
                                 stats=stats)
 
     def num_rows(self) -> int:
+        """Total rows in the table (catalog statistic the optimizer uses)."""
         raise NotImplementedError
 
 
@@ -119,25 +146,77 @@ class InMemoryTable(TableSource):
 
 
 class Catalog:
+    """Named ``TableSource`` registry (a Presto connector catalog).
+
+    Every (re-)registration bumps the table's *version*; the scheduler's
+    plan/result caches snapshot versions at insert time and treat any bump
+    as invalidation, so re-registering a table (new data under the same
+    name) can never serve stale cached results.
+    """
+
     def __init__(self):
         self._tables: Dict[str, TableSource] = {}
+        self._versions: Dict[str, int] = {}
 
     def register(self, source: TableSource):
+        """Add or replace a table; bumps its version."""
         self._tables[source.name] = source
+        self._versions[source.name] = self._versions.get(source.name, 0) + 1
 
     def register_numpy(self, name: str, data: Dict[str, np.ndarray], schema,
                        unique_keys: tuple = ()):
+        """Register a dict of numpy arrays as an ``InMemoryTable``."""
         self.register(InMemoryTable(name, data, schema, unique_keys))
 
     def get(self, name: str) -> TableSource:
+        """Look up a table source; raises ``KeyError`` if unknown."""
         return self._tables[name]
 
     def tables(self):
+        """Names of all registered tables."""
         return list(self._tables)
+
+    def version(self, name: str) -> int:
+        """Monotonic registration counter for ``name`` (0 = never seen)."""
+        return self._versions.get(name, 0)
+
+    def versions(self, names) -> tuple:
+        """Sorted ``(name, version)`` snapshot for cache-validity checks."""
+        return tuple(sorted((n, self.version(n)) for n in names))
 
 
 @dataclasses.dataclass
 class Session:
+    """The engine's public entry point: a catalog bound to an execution
+    configuration, with both batch and serving entry points.
+
+    Batch path (one query, this thread)::
+
+        from repro.core import Session
+        from repro.core.expr import col
+        from repro.tpch import dbgen
+
+        session = Session(dbgen.load_catalog(sf=0.002), num_workers=2)
+        out = (session.table("lineitem")
+               .filter(col("l_quantity") < 10.0)
+               .group_by("l_returnflag")
+               .agg(n=("count", None))
+               .collect())
+
+    Serving path (many queries, scheduled concurrently under a
+    device-memory budget, with plan + result caching)::
+
+        from repro.tpch import queries
+        h1 = session.submit(queries.build_query(1, session.catalog))
+        h6 = session.submit(queries.build_query(6, session.catalog))
+        q1, q6 = session.gather(h1, h6)       # morsel pipelines interleave
+        out = session.run(queries.build_query(14, session.catalog))
+
+    ``submit``/``gather``/``run`` route through a lazily created
+    ``QueryScheduler`` (see ``core.scheduler``); configure it by assigning
+    ``session.scheduler_config = SchedulerConfig(...)`` before first use.
+    """
+
     catalog: Catalog
     num_workers: int = 1
     exchange: Optional[ExchangeProtocol] = None
@@ -149,8 +228,12 @@ class Session:
     # synchronous materialize-then-run baseline)
     streaming: bool = True
     prefetch_depth: int = 2
+    # scheduler knobs (core.scheduler.SchedulerConfig); None = defaults.
+    # Assign before the first submit()/run() — the scheduler is built lazily.
+    scheduler_config: Optional[object] = None
 
     def context(self) -> ExecutionContext:
+        """Snapshot this session's execution config for one Driver run."""
         return ExecutionContext(
             catalog=self.catalog,
             num_workers=self.num_workers,
@@ -163,16 +246,76 @@ class Session:
         )
 
     def execute(self, plan: PlanNode) -> Dict[str, np.ndarray]:
+        """Execute one plan on this thread; returns name -> numpy column.
+
+        This is the direct batch path: no admission control, no caches.
+        Serving workloads should prefer ``run``/``submit``, which route
+        through the scheduler.
+        """
         driver = Driver(self.context())
         self.last_driver = driver
         return driver.collect(plan)
+
+    # -- serving entry points (core.scheduler) ------------------------------
+    # guards lazy scheduler creation: N client threads whose first call is
+    # submit() must all get the same scheduler (one budget, one cache)
+    _scheduler_lock = threading.Lock()
+
+    def scheduler(self):
+        """The session's ``QueryScheduler`` (created on first use).
+
+        Configure with ``session.scheduler_config = SchedulerConfig(...)``
+        before the first call; later assignments require ``reset_scheduler``.
+        """
+        sched = getattr(self, "_scheduler", None)
+        if sched is None:
+            with Session._scheduler_lock:
+                sched = getattr(self, "_scheduler", None)
+                if sched is None:
+                    from .scheduler import QueryScheduler
+                    sched = QueryScheduler(self, self.scheduler_config)
+                    self._scheduler = sched
+        return sched
+
+    def reset_scheduler(self) -> None:
+        """Drop the current scheduler (and its caches/queue) if any."""
+        sched = getattr(self, "_scheduler", None)
+        if sched is not None:
+            sched.close(wait=False)
+            self._scheduler = None
+
+    def submit(self, query, priority: int = 0):
+        """Submit a query for scheduled execution; returns a ``QueryHandle``.
+
+        ``query`` is a ``PlanNode`` or a ``QueryBuilder`` (its plan is
+        taken as-built; the scheduler optimizes through the plan cache).
+        Raises ``QueryRejected`` when admission control refuses it::
+
+            h = session.submit(session.table("lineitem").limit(5), priority=1)
+            rows = h.result()
+        """
+        plan = query.plan if hasattr(query, "plan") else query
+        return self.scheduler().submit(plan, priority=priority)
+
+    def gather(self, *handles) -> list:
+        """Wait for ``submit`` handles; results in argument order."""
+        return self.scheduler().gather(*handles)
+
+    def run(self, query, priority: int = 0) -> Dict[str, np.ndarray]:
+        """Synchronous scheduled execution: ``submit`` + ``result``.
+
+        Unlike ``execute``, this path gets admission control and the
+        plan/result caches — repeated identical queries are served from
+        cache until a referenced table is re-registered.
+        """
+        return self.submit(query, priority=priority).result()
 
     def executor_stats(self) -> Dict[str, object]:
         """Stats from the most recent ``execute`` (scan + operator timings)."""
         driver = getattr(self, "last_driver", None)
         return driver.executor_stats() if driver is not None else {}
 
-    # -- fluent frontend + planner entry points -----------------------------
+    # -- fluent frontend + optimizer entry points ---------------------------
     def table(self, name: str, columns=None):
         """Start a fluent query on a catalog table; ``.collect()`` runs it
         through the logical optimizer and this session's driver."""

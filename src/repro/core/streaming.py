@@ -57,6 +57,7 @@ class ScanStats:
         return max(0.0, 1.0 - self.wait_seconds / self.read_seconds)
 
     def summary(self) -> Dict[str, float]:
+        """Counters as a plain dict, with derived ``prefetch_overlap``."""
         d = dataclasses.asdict(self)
         d["prefetch_overlap"] = round(self.prefetch_overlap, 4)
         return d
@@ -73,6 +74,7 @@ class HostMorsel:
     schema: Dict[str, object]
 
     def nbytes(self) -> int:
+        """Host bytes this morsel occupies (columns + validity)."""
         total = self.validity.nbytes
         for a in self.columns.values():
             total += a.nbytes
@@ -189,6 +191,7 @@ class MorselPrefetcher:
 
     # -- consumer ------------------------------------------------------------
     def close(self) -> None:
+        """Stop the producer thread (also called when iteration ends)."""
         self._closed.set()
 
     def __iter__(self) -> Iterator[DeviceTable]:

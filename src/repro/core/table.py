@@ -33,12 +33,16 @@ Schema = Dict[str, DType]
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class DeviceTable:
+    """One device-resident batch: equal-capacity columns + validity mask
+    + host-side schema (the paper's CudfVector analogue; see module doc)."""
+
     columns: Dict[str, jax.Array]
     validity: jax.Array                  # bool[capacity]
     schema: Schema                       # aux data (host side)
 
     # -- pytree plumbing (schema is static) --------------------------------
     def tree_flatten(self):
+        """jax pytree hook: arrays are leaves, schema is aux data."""
         names = tuple(sorted(self.columns.keys()))
         children = tuple(self.columns[n] for n in names) + (self.validity,)
         aux = (names, tuple((n, self.schema[n]) for n in sorted(self.schema)))
@@ -46,6 +50,7 @@ class DeviceTable:
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """jax pytree hook: rebuild from leaves + static schema."""
         names, schema_items = aux
         cols = dict(zip(names, children[:-1]))
         return cls(cols, children[-1], dict(schema_items))
@@ -53,16 +58,20 @@ class DeviceTable:
     # -- basic properties ---------------------------------------------------
     @property
     def capacity(self) -> int:
+        """Static row capacity (valid + dead rows)."""
         return int(self.validity.shape[0])
 
     @property
     def column_names(self) -> List[str]:
+        """Column names in insertion order."""
         return list(self.columns.keys())
 
     def num_valid(self) -> jax.Array:
+        """Number of live rows (traced scalar)."""
         return jnp.sum(self.validity.astype(jnp.int32))
 
     def nbytes(self) -> int:
+        """Device bytes pinned by this batch (columns + validity)."""
         total = self.validity.size * self.validity.dtype.itemsize
         for arr in self.columns.values():
             total += arr.size * arr.dtype.itemsize
@@ -72,6 +81,7 @@ class DeviceTable:
     @staticmethod
     def from_numpy(data: Dict[str, np.ndarray], schema: Schema,
                    capacity: Optional[int] = None) -> "DeviceTable":
+        """Device-put host arrays, zero-padded up to ``capacity`` rows."""
         n = len(next(iter(data.values()))) if data else 0
         cap = capacity or max(n, 1)
         assert cap >= n, f"capacity {cap} < rows {n}"
@@ -96,6 +106,7 @@ class DeviceTable:
 
     # -- row ops ---------------------------------------------------------------
     def select(self, names) -> "DeviceTable":
+        """Projection to the named columns (no copy)."""
         return DeviceTable(
             {n: self.columns[n] for n in names},
             self.validity,
@@ -103,11 +114,13 @@ class DeviceTable:
         )
 
     def rename(self, mapping: Dict[str, str]) -> "DeviceTable":
+        """Rename columns via ``{old: new}`` (no copy)."""
         cols = {mapping.get(n, n): a for n, a in self.columns.items()}
         schema = {mapping.get(n, n): d for n, d in self.schema.items()}
         return DeviceTable(cols, self.validity, schema)
 
     def with_column(self, name: str, arr: jax.Array, dtype: DType) -> "DeviceTable":
+        """Attach one computed column (same capacity)."""
         cols = dict(self.columns)
         cols[name] = arr
         schema = dict(self.schema)
@@ -115,6 +128,7 @@ class DeviceTable:
         return DeviceTable(cols, self.validity, schema)
 
     def filter(self, mask: jax.Array) -> "DeviceTable":
+        """Mark rows dead where ``mask`` is false (no compaction)."""
         return DeviceTable(self.columns, self.validity & mask, self.schema)
 
     def gather(self, idx: jax.Array, valid: jax.Array) -> "DeviceTable":
@@ -136,6 +150,7 @@ class DeviceTable:
         return DeviceTable(cols, jnp.take(self.validity, order), self.schema)
 
     def pad_to(self, capacity: int) -> "DeviceTable":
+        """Grow to ``capacity`` rows by appending dead padding rows."""
         if capacity == self.capacity:
             return self
         assert capacity > self.capacity
@@ -166,6 +181,7 @@ def concat_tables(tables: List[DeviceTable]) -> DeviceTable:
 
 
 def empty_like_schema(schema: Schema, capacity: int) -> DeviceTable:
+    """All-dead table of ``capacity`` rows with the given schema."""
     cols = {
         n: jnp.zeros(dt.storage_shape(capacity), dtype=dt.jnp_dtype())
         for n, dt in schema.items()

@@ -57,6 +57,8 @@ def _decode_dtype(code: str, dictionary=None) -> dt.DType:
 def write_table(root: str, name: str, data: Dict[str, np.ndarray],
                 schema: Dict[str, dt.DType], chunks: int = 1,
                 stats: bool = True) -> None:
+    """Persist a table as one binary file per (column, chunk), min/max
+    stats in the filename (the paper's minimal column-chunk format)."""
     tdir = os.path.join(root, name)
     os.makedirs(tdir, exist_ok=True)
     n = len(next(iter(data.values())))

@@ -33,6 +33,8 @@ _PAGE_ROWS = 1024
 
 def write_paged_table(root: str, name: str, data: Dict[str, np.ndarray],
                       schema: Dict[str, dt.DType], row_groups: int = 4) -> None:
+    """Persist a table in the paged format: magic, delta-encoded pages with
+    JSON headers, per-row-group metadata, JSON footer + trailing offset."""
     os.makedirs(root, exist_ok=True)
     path = os.path.join(root, f"{name}.paged")
     n = len(next(iter(data.values())))
@@ -136,6 +138,7 @@ class PagedTable:
         return json.loads(f.read(hlen))
 
     def read_rowgroup_column(self, rg_index: int, col: str) -> np.ndarray:
+        """Decode every page of one column within one row group."""
         d = self.schema[col]
         out = []
         with open(self.path, "rb") as f:
@@ -144,6 +147,7 @@ class PagedTable:
         return np.concatenate(out) if out else np.zeros(0, d.np_dtype())
 
     def read_column(self, col: str) -> np.ndarray:
+        """Decode one column across all row groups (full-table read)."""
         d = self.schema[col]
         out = []
         with open(self.path, "rb") as f:
@@ -193,6 +197,7 @@ class PagedTableSource(TableSource):
 
     @property
     def footer(self) -> dict:
+        """The file footer (row counts, row-group + schema metadata)."""
         return self.reader.footer
 
     @property

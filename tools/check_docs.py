@@ -1,0 +1,137 @@
+"""Docs gate for CI: intra-repo markdown links + public-API docstrings.
+
+    python tools/check_docs.py
+
+Two checks, both hard failures:
+
+1. Every relative link in the repo's markdown files must resolve to an
+   existing file (anchors and external http(s)/mailto links are ignored).
+2. Every public module / class / function / method in the public API
+   surface (``src/repro/core`` and ``src/repro/storage``) must have a
+   docstring. Private names (leading underscore), dunders, and trivial
+   dataclass plumbing like ``children``/``__repr__`` overrides are exempt.
+
+Run locally before pushing; CI runs it in the ``docs`` job.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# markdown files that gate the build (generated/contract files excluded)
+MD_SKIP = {"CHANGES.md", "ISSUE.md", "SNIPPETS.md", "PAPERS.md", "PAPER.md"}
+
+# public API surface for the docstring check
+API_DIRS = ("src/repro/core", "src/repro/storage")
+
+# names whose absence of a docstring is noise, not information
+EXEMPT_NAMES = {"children", "main"}
+
+# implementations of a protocol documented once on the base/contract:
+# the Velox operator contract (open/add_input/finish), expression-tree
+# methods (evaluate/out_dtype/references), the exchange protocol, storage
+# source hooks, and jax pytree hooks. The *base* definition still needs a
+# docstring; overrides inherit it.
+PROTOCOL_METHODS = {
+    "open", "add_input", "finish",
+    "evaluate", "out_dtype", "references",
+    "repartition", "broadcast",
+    "num_rows", "num_chunks",
+    "tree_flatten", "tree_unflatten",
+}
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_markdown_links() -> list:
+    """Every relative markdown link must point at an existing file."""
+    errors = []
+    for dirpath, dirnames, filenames in os.walk(REPO):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", ".claude", "__pycache__",
+                                    "results", ".ruff_cache",
+                                    ".pytest_cache")]
+        for fname in filenames:
+            if not fname.endswith(".md") or fname in MD_SKIP:
+                continue
+            path = os.path.join(dirpath, fname)
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+            for m in _LINK.finditer(text):
+                target = m.group(1).split("#")[0]
+                if (not target or target.startswith(("http://", "https://",
+                                                     "mailto:"))):
+                    continue
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), target))
+                if not os.path.exists(resolved):
+                    rel = os.path.relpath(path, REPO)
+                    errors.append(f"{rel}: broken link -> {m.group(1)}")
+    return errors
+
+
+def _missing_docstrings(path: str) -> list:
+    with open(path, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    rel = os.path.relpath(path, REPO)
+    errors = []
+    if ast.get_docstring(tree) is None:
+        errors.append(f"{rel}: missing module docstring")
+
+    def is_public(name: str) -> bool:
+        return not name.startswith("_") and name not in EXEMPT_NAMES
+
+    def visit(node, prefix: str) -> None:
+        in_class = bool(prefix)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                if not is_public(child.name):
+                    continue           # private classes gate nothing
+                if ast.get_docstring(child) is None:
+                    errors.append(
+                        f"{rel}: class {prefix}{child.name} has no docstring")
+                visit(child, f"{prefix}{child.name}.")
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if in_class and child.name in PROTOCOL_METHODS \
+                        and prefix.count(".") >= 1 and _has_base(node):
+                    continue           # documented-protocol implementation
+                if is_public(child.name) and ast.get_docstring(child) is None:
+                    errors.append(
+                        f"{rel}: def {prefix}{child.name} has no docstring")
+
+    def _has_base(cls) -> bool:
+        return isinstance(cls, ast.ClassDef) and bool(cls.bases)
+
+    visit(tree, "")
+    return errors
+
+
+def check_api_docstrings() -> list:
+    """Public classes/functions in the API surface carry docstrings."""
+    errors = []
+    for api_dir in API_DIRS:
+        root = os.path.join(REPO, api_dir)
+        for fname in sorted(os.listdir(root)):
+            if fname.endswith(".py"):
+                errors.extend(_missing_docstrings(os.path.join(root, fname)))
+    return errors
+
+
+def main() -> int:
+    errors = check_markdown_links() + check_api_docstrings()
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        print(f"\n{len(errors)} docs problems")
+        return 1
+    print("docs OK: markdown links resolve, public API is documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
