@@ -30,6 +30,7 @@ def main(argv=None) -> None:
         ("concurrency(serving)", bench_concurrency.run),
         ("barebones(Table1)", bench_barebones.run),
         ("exchange(Fig5,§3.4)", bench_exchange.run),
+        ("exchange_planned(§3.3)", bench_exchange.run_planned),
         ("q5_scaling(Fig6)", bench_q5_scaling.run),
         ("weak_scaling(Fig7)", bench_weak_scaling.run),
         ("scaleup(Fig8)", bench_scaleup.run),

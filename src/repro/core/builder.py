@@ -307,23 +307,34 @@ class QueryBuilder:
         """The logical ``PlanNode`` tree built so far (unoptimized)."""
         return self.plan
 
-    def optimized(self, config: opt.OptimizerConfig = opt.DEFAULT_CONFIG
+    def _config(self) -> opt.OptimizerConfig:
+        """Session-bound builders plan for the session's worker count, so
+        explain()/optimized() show the plan collect() actually executes."""
+        if self._session is not None:
+            return self._session.optimizer_config()
+        return opt.DEFAULT_CONFIG
+
+    def optimized(self, config: Optional[opt.OptimizerConfig] = None
                   ) -> P.PlanNode:
-        """The plan after the rule-based optimizer pipeline."""
-        return opt.optimize(self.plan, self._catalog, config=config)
+        """The plan after the rule-based optimizer pipeline (including
+        exchange placement when the bound session is distributed)."""
+        return opt.optimize(self.plan, self._catalog,
+                            config=config or self._config())
 
     def explain(self) -> str:
         """Plan tree before and after the optimizer pipeline."""
-        return opt.explain_before_after(self.plan, self._catalog)
+        return opt.explain_before_after(self.plan, self._catalog,
+                                        config=self._config())
 
     def collect(self, optimize: bool = True):
         """Optimize and execute; requires a session-bound builder
-        (``session.table(...)``)."""
+        (``session.table(...)``). Optimization uses the session's worker
+        count, so distributed sessions run exchange-placed fragment plans."""
         if self._session is None:
             raise RuntimeError(
                 "collect() needs a session-bound builder; build via "
                 "session.table(...) or execute to_plan()/optimized() yourself")
-        plan = self.optimized() if optimize else self.plan
+        plan = self._session.optimize(self.plan) if optimize else self.plan
         return self._session.execute(plan)
 
     execute = collect

@@ -132,13 +132,20 @@ class Driver:
         self.op_seconds: Dict[str, float] = {}
         self.conversion_stats: Dict[str, int] = {}
         self.scan_stats: Dict[str, ScanStats] = {}
+        # per-fragment exchange stats: one entry per exchange executed, in
+        # execution order ("#0 Repartition(l_orderkey)" -> counter deltas)
+        self.exchange_stats: Dict[str, Dict[str, float]] = {}
+        self._frag_seq = 0
 
     def executor_stats(self) -> Dict[str, object]:
-        """Per-query executor stats: scan counters + operator timings."""
+        """Per-query executor stats: scan counters, operator timings, and
+        per-fragment exchange counters (rows/bytes moved, host staging)."""
         return {
             "tables": {t: s.summary() for t, s in self.scan_stats.items()},
             "op_seconds": dict(self.op_seconds),
             "conversions": dict(self.conversion_stats),
+            "exchange_protocol": self.ctx.exchange.name,
+            "exchanges": {k: dict(v) for k, v in self.exchange_stats.items()},
         }
 
     # -- public API ----------------------------------------------------------
@@ -216,11 +223,33 @@ class Driver:
     def _w(self) -> int:
         return self.ctx.num_workers
 
-    def _repartition(self, table: DeviceTable, keys: Sequence[str]) -> DeviceTable:
-        return self.ctx.exchange.repartition(table, tuple(keys), self._w)
+    def _repartition(self, table: DeviceTable, keys: Sequence[str],
+                     label: str = "repartition") -> DeviceTable:
+        return self._tracked(
+            f"{label}({','.join(keys)})",
+            lambda: self.ctx.exchange.repartition(table, tuple(keys), self._w))
 
-    def _broadcast(self, table: DeviceTable) -> DeviceTable:
-        return self.ctx.exchange.broadcast(table, self._w)
+    def _broadcast(self, table: DeviceTable,
+                   label: str = "broadcast") -> DeviceTable:
+        return self._tracked(
+            label, lambda: self.ctx.exchange.broadcast(table, self._w))
+
+    def _tracked(self, label: str, fn):
+        """Run one exchange, recording its stats delta as a fragment entry
+        (surfaced through ``Session.explain(analyze=True)``)."""
+        st = self.ctx.exchange.stats
+        before = dataclasses.replace(st)
+        out = fn()
+        self.exchange_stats[f"#{self._frag_seq} {label}"] = {
+            "rounds": st.rounds - before.rounds,
+            "rows_moved": st.rows_moved - before.rows_moved,
+            "bytes_moved": st.bytes_moved - before.bytes_moved,
+            "host_staged_bytes": (st.host_staged_bytes
+                                  - before.host_staged_bytes),
+            "seconds": st.seconds - before.seconds,
+        }
+        self._frag_seq += 1
+        return out
 
     # -- recursive plan execution ----------------------------------------------
     def _stream(self, node: P.PlanNode) -> Stream:
@@ -307,10 +336,11 @@ class Driver:
         partial_out = list(self._run_pipeline(partial, child.batches))
         table = self._materialize_table(iter(partial_out))
         if node.group_keys:
-            exchanged = self._repartition(table, node.group_keys)
+            exchanged = self._repartition(table, node.group_keys, "agg")
             dist = "partitioned"
         else:
-            exchanged = self._broadcast(table)   # global agg: replicate partials
+            # global agg: replicate partials
+            exchanged = self._broadcast(table, "agg-broadcast")
             dist = "replicated"
         final = ops.HashAggregation(node.group_keys, node.aggs, "final",
                                     node.max_groups)
@@ -320,10 +350,13 @@ class Driver:
         child = self._stream(node.child)
         d1 = ops.Distinct(node.keys, node.max_groups)
         out = list(self._run_pipeline(d1, child.batches))
-        if self._w == 1 or child.dist == "replicated":
+        # explicit partial/final fragments (planner-placed exchange between
+        # them) run the local dedup only; 'auto' keeps the runtime exchange
+        if (node.mode in ("partial", "final") or self._w == 1
+                or child.dist == "replicated"):
             return Stream(iter(out), child.dist)
         table = self._materialize_table(iter(out))
-        exchanged = self._repartition(table, node.keys)
+        exchanged = self._repartition(table, node.keys, "distinct")
         d2 = ops.Distinct(node.keys, node.max_groups)
         return Stream(self._run_pipeline(d2, self._rebatch(exchanged)),
                       "partitioned")
@@ -339,12 +372,14 @@ class Driver:
         if self._w > 1:
             if node.distribution == "broadcast":
                 if build_stream.dist != "replicated":
-                    build = self._broadcast(build)
+                    build = self._broadcast(build, "join-build-broadcast")
             elif node.distribution == "partitioned":
                 if build_stream.dist != "replicated":
-                    build = self._repartition(build, node.build_keys)
+                    build = self._repartition(build, node.build_keys,
+                                              "join-build")
                 probe_tab = self._materialize_table(probe_batches)
-                probe_tab = self._repartition(probe_tab, node.probe_keys)
+                probe_tab = self._repartition(probe_tab, node.probe_keys,
+                                              "join-probe")
                 probe_batches = self._rebatch(probe_tab)
                 dist = "partitioned"
             # 'local': co-partitioned already, no movement
@@ -358,18 +393,25 @@ class Driver:
         return Stream(self._run_pipeline(join, probe_batches), dist)
 
     def _exec_orderby(self, node: P.OrderBy) -> Stream:
+        from .exchange import maybe_compact
         child = self._stream(node.child)
-        table = self._materialize_table(child.batches)
-        if self._w > 1 and child.dist != "replicated":
-            table = self._broadcast(table)      # final ordering is global
+        # compact away dead padding (e.g. max_groups slots) before sorting
+        table = maybe_compact(self._materialize_table(child.batches))
         ob = ops.OrderBy(node.keys, node.descending, node.limit)
+        if node.local:
+            # distributed top-N partial: each worker sorts/truncates its own
+            # slice; the planner's Broadcast above gathers the candidates
+            return Stream(self._run_pipeline(ob, iter([table])), child.dist)
+        if self._w > 1 and child.dist != "replicated":
+            # final ordering is global
+            table = self._broadcast(table, "orderby-gather")
         return Stream(self._run_pipeline(ob, iter([table])), "replicated")
 
     def _exec_limit(self, node: P.Limit) -> Stream:
         child = self._stream(node.child)
         table = self._materialize_table(child.batches)
         if self._w > 1 and child.dist != "replicated":
-            table = self._broadcast(table)
+            table = self._broadcast(table, "limit-gather")
         lim = ops.Limit(node.n)
         return Stream(self._run_pipeline(lim, iter([table])), "replicated")
 
@@ -377,14 +419,30 @@ class Driver:
         scalar_stream = self._stream(node.scalar)
         scalar = self._materialize(scalar_stream)
         if self._w > 1 and scalar_stream.dist != "replicated":
-            scalar = self._broadcast(scalar)
+            scalar = self._broadcast(scalar, "scalar-broadcast")
         child = self._stream(node.child)
         sb = ops.ScalarBroadcast(node.columns)
         sb.set_scalar(scalar)
         return Stream(self._run_pipeline(sb, child.batches), child.dist)
 
-    def _exec_exchange(self, node: P.Exchange) -> Stream:
+    def _exec_exchange(self, node, label: str = "exchange") -> Stream:
         child = self._stream(node.child)
         table = self._materialize_table(child.batches)
-        exchanged = self._repartition(table, node.keys)
+        exchanged = self._repartition(table, node.keys, label)
         return Stream(self._rebatch(exchanged), "partitioned")
+
+    def _exec_repartition(self, node: P.Repartition) -> Stream:
+        """Planner-placed hash exchange: same execution as the legacy
+        Exchange node, under its fragment label."""
+        return self._exec_exchange(node, label="Repartition")
+
+    def _exec_broadcast(self, node: P.Broadcast) -> Stream:
+        """Planner-placed replication: every worker receives all valid rows
+        of the child fragment (no-op when the stream is already replicated,
+        which would otherwise multiply rows)."""
+        child = self._stream(node.child)
+        table = self._materialize_table(child.batches)
+        if child.dist == "replicated":
+            return Stream(self._rebatch(table), "replicated")
+        out = self._broadcast(table, "Broadcast")
+        return Stream(self._rebatch(out), "replicated")

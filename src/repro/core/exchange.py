@@ -117,6 +117,51 @@ def _partition_counts(table: DeviceTable, key_names, num_workers: int):
     return jax.vmap(per_worker)(table)          # [W_src, W_dst]
 
 
+@functools.partial(jax.jit, static_argnums=(1,))
+def _compact_stacked(table: DeviceTable, cap: int) -> DeviceTable:
+    """Vector compaction (paper §3.3.2): per worker, move valid rows to the
+    front and truncate to ``cap`` slots. Exchanges call this with ``cap``
+    sized from the metadata phase, so dead padding (e.g. unused
+    ``max_groups`` slots of an aggregation output) is not transmitted and
+    not carried into downstream operators.
+
+    The gather indices are built with a stream-compaction scatter (stable
+    rank via cumsum) so only ``cap`` output rows are ever gathered — a full
+    argsort-based compact would gather the whole padded capacity, which is
+    exactly the cost this call exists to avoid."""
+
+    def per_worker(t: DeviceTable):
+        n = t.validity.shape[0]
+        csum = jnp.cumsum(t.validity.astype(jnp.int32))
+        # j-th valid row = first position where the running count hits j+1
+        # (binary-search inversion; XLA CPU scatter is a scalar loop)
+        gather = jnp.searchsorted(
+            csum, jnp.arange(1, cap + 1, dtype=jnp.int32), side="left")
+        out_valid = gather < n
+        idx = jnp.minimum(gather, n - 1).astype(jnp.int32)
+        cols = {name: jnp.take(a, idx, axis=0)
+                for name, a in t.columns.items()}
+        return DeviceTable(cols, out_valid, t.schema)
+
+    return jax.vmap(per_worker)(table)
+
+
+def _pow2(n: int) -> int:
+    return int(2 ** np.ceil(np.log2(max(n, 1))))
+
+
+def maybe_compact(table: DeviceTable) -> DeviceTable:
+    """Vector compaction when it at least halves capacity (§3.3.2): trims
+    per-worker rows to pow2(max per-worker valid count). Shared by the
+    mesh exchange paths and the driver's blocking operators (a sort over
+    ``max_groups`` padding costs more than this one metadata sync)."""
+    per_worker = np.asarray(table.validity.sum(axis=1))
+    cap = _pow2(int(per_worker.max()) if per_worker.size else 1)
+    if cap * 2 <= table.validity.shape[1]:
+        return _compact_stacked(table, cap)
+    return table
+
+
 @functools.partial(jax.jit, static_argnums=(1, 2, 3))
 def _partition_layout_table(table: DeviceTable, key_names, num_workers: int,
                             part_cap: int) -> DeviceTable:
@@ -134,6 +179,72 @@ def _partition_layout_table(table: DeviceTable, key_names, num_workers: int,
                            t.schema)
 
     return jax.vmap(per_worker)(table)          # leaves [W_src, W_dst, cap, ...]
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def _repartition_fused(table: DeviceTable, key_names, num_workers: int,
+                       out_cap: int) -> DeviceTable:
+    """Single-device fast path: the whole shuffle as index arithmetic plus
+    ONE gather per column, straight into compacted [W_dst, out_cap] output.
+
+    The staged path (`_partition_layout_table` + `_exchange_data`)
+    materializes a [W_src, W_dst, cap] send buffer, transposes it (the ICI
+    all-to-all when a mesh is present), and compacts — three passes over
+    the column bytes. Off-mesh those passes share one memory space, so the
+    destination row of every source row can be computed up front (stable
+    rank within its (src, dst) bucket + exclusive prefix of bucket counts
+    over sources) and each column moved exactly once. ``out_cap`` comes
+    from the metadata phase: >= the largest per-destination row total, so
+    no row is dropped.
+    """
+    w, cap = table.validity.shape
+
+    def ids(t: DeviceTable):
+        return rel.partition_ids([t.columns[k] for k in key_names],
+                                 t.validity, num_workers)
+
+    pids = jax.vmap(ids)(table)                              # [W, cap]
+    # per-destination running counts over the flattened (src-major) row
+    # order; the j-th row received by dst d is the first flat position
+    # whose running dst-d count reaches j+1 (binary-search inversion — no
+    # sort, no scatter: XLA CPU is slow at both)
+    onehot = ((pids[..., None] == jnp.arange(num_workers, dtype=jnp.int32))
+              & table.validity[..., None]).astype(jnp.int32)
+    csum = jnp.cumsum(onehot.reshape(w * cap, num_workers), axis=0)
+    queries = jnp.arange(1, out_cap + 1, dtype=jnp.int32)
+    gmap = jax.vmap(
+        lambda col: jnp.searchsorted(col, queries, side="left"),
+        in_axes=1)(csum)                                     # [D, out_cap]
+    out_valid = gmap < w * cap
+    idx = jnp.minimum(gmap, w * cap - 1).astype(jnp.int32)
+    cols = {}
+    for n, a in table.columns.items():
+        flat = a.reshape((w * cap,) + a.shape[2:])
+        cols[n] = jnp.take(flat, idx, axis=0).reshape(
+            (num_workers, out_cap) + a.shape[2:])
+    return DeviceTable(cols, out_valid, table.schema)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _broadcast_fused(table: DeviceTable, num_workers: int,
+                     out_cap: int) -> DeviceTable:
+    """Single-device fast path for broadcast: compact all valid rows with
+    one gather per column, then replicate by broadcast (no per-worker
+    copies of dead padding). ``out_cap`` >= total valid rows."""
+    w, cap = table.validity.shape
+    flatv = table.validity.reshape(-1)
+    csum = jnp.cumsum(flatv.astype(jnp.int32))
+    gmap = jnp.searchsorted(
+        csum, jnp.arange(1, out_cap + 1, dtype=jnp.int32), side="left")
+    out_valid = gmap < w * cap
+    idx = jnp.minimum(gmap, w * cap - 1).astype(jnp.int32)
+    cols = {}
+    for n, a in table.columns.items():
+        flat = a.reshape((w * cap,) + a.shape[2:])
+        row = jnp.take(flat, idx, axis=0)
+        cols[n] = jnp.broadcast_to(row[None], (num_workers,) + row.shape)
+    valid = jnp.broadcast_to(out_valid[None], (num_workers, out_cap))
+    return DeviceTable(cols, valid, table.schema)
 
 
 class ExchangeProtocol:
@@ -163,10 +274,27 @@ class ExchangeProtocol:
 
     # -- shared flow control ------------------------------------------------
     def _choose_part_cap(self, counts: np.ndarray) -> int:
-        """Receive-buffer sizing from the metadata phase (flow control)."""
-        m = int(counts.max()) if counts.size else 0
-        cap = max(m, 1)
-        return int(2 ** np.ceil(np.log2(cap)))  # pow2 for layout friendliness
+        """Receive-buffer sizing from the metadata phase (flow control);
+        pow2 for layout friendliness."""
+        return _pow2(int(counts.max()) if counts.size else 1)
+
+    @staticmethod
+    def _ensure_rows(table: DeviceTable) -> DeviceTable:
+        """Pad zero-capacity tables to one (dead) row per worker.
+
+        A fragment can legitimately produce a [W, 0] table (all rows
+        filtered, empty partition after a skewed shuffle); the layout/gather
+        paths and downstream operators need at least one row slot."""
+        if table.validity.shape[-1] > 0:
+            return table
+
+        def pad(a):
+            widths = [(0, 0)] * a.ndim
+            widths[1] = (0, 1)
+            return jnp.pad(a, widths)
+
+        return DeviceTable({n: pad(a) for n, a in table.columns.items()},
+                           pad(table.validity), table.schema)
 
 
 class ICIExchange(ExchangeProtocol):
@@ -210,12 +338,27 @@ class ICIExchange(ExchangeProtocol):
 
     def repartition(self, table, key_names, num_workers):
         t0 = time.perf_counter()
+        table = self._ensure_rows(table)
         key_names = tuple(key_names)
         # metadata phase (rendezvous handshake): size the receive buffers
         counts = np.asarray(_partition_counts(table, key_names, num_workers))
-        part_cap = self._choose_part_cap(counts)
-        staged = _partition_layout_table(table, key_names, num_workers, part_cap)
-        out = self._exchange_data(staged, num_workers, part_cap)
+        out_cap = _pow2(int(counts.sum(axis=0).max()) if counts.size else 1)
+        if self.mesh is None:
+            # off-mesh: one fused index-math + gather program per round
+            out = _repartition_fused(table, key_names, num_workers, out_cap)
+        else:
+            # on-mesh: staged send buffers whose worker-axis transpose
+            # lowers to the ICI all-to-all, then receive-side compaction
+            # (vector compaction, §3.3.2). Compaction preserves each row's
+            # source worker and keys, so the metadata counts above stay
+            # valid — no second metadata pass
+            table = maybe_compact(table)
+            part_cap = self._choose_part_cap(counts)
+            staged = _partition_layout_table(table, key_names, num_workers,
+                                             part_cap)
+            out = self._exchange_data(staged, num_workers, part_cap)
+            if out_cap < out.validity.shape[1]:
+                out = _compact_stacked(out, out_cap)
         self.stats.rounds += 1
         moved = int(counts.sum() - np.trace(counts))  # off-diagonal rows move
         self.stats.rows_moved += moved
@@ -238,9 +381,15 @@ class ICIExchange(ExchangeProtocol):
 
     def broadcast(self, table, num_workers):
         t0 = time.perf_counter()
-        out = self._broadcast_data(table, num_workers)
-        self.stats.rounds += 1
+        table = self._ensure_rows(table)
+        # metadata phase: valid counts size the replica buffers, so dead
+        # padding is compacted away before replication W-fold
         rows = int(table.num_valid())
+        if self.mesh is None:
+            out = _broadcast_fused(table, num_workers, _pow2(rows))
+        else:
+            out = self._broadcast_data(maybe_compact(table), num_workers)
+        self.stats.rounds += 1
         self.stats.rows_moved += rows * (num_workers - 1)
         self.stats.bytes_moved += rows * (num_workers - 1) * _row_bytes(table)
         self.stats.seconds += time.perf_counter() - t0
@@ -279,6 +428,7 @@ class HostExchange(ExchangeProtocol):
 
     def repartition(self, table, key_names, num_workers):
         t0 = time.perf_counter()
+        table = self._ensure_rows(table)
         # device -> host staging (the cost the paper eliminates)
         host_cols = {n: np.asarray(a) for n, a in table.columns.items()}
         validity = np.asarray(table.validity)
@@ -318,8 +468,7 @@ class HostExchange(ExchangeProtocol):
             cnt = sum(v.shape[0] for v in vals) if vals else 0
             per_worker.append((rows, vals, cnt))
 
-        cap = max(max(c for _, _, c in per_worker), 1)
-        cap = int(2 ** np.ceil(np.log2(cap)))
+        cap = _pow2(max(c for _, _, c in per_worker))
         out_cols = {n: np.zeros((w, cap) + host_cols[n].shape[2:],
                                 dtype=host_cols[n].dtype) for n in host_cols}
         out_valid = np.zeros((w, cap), dtype=bool)
@@ -342,6 +491,7 @@ class HostExchange(ExchangeProtocol):
 
     def broadcast(self, table, num_workers):
         t0 = time.perf_counter()
+        table = self._ensure_rows(table)
         host_cols = {n: np.asarray(a) for n, a in table.columns.items()}
         validity = np.asarray(table.validity)
         self.stats.host_staged_bytes += sum(a.nbytes for a in host_cols.values())
@@ -352,7 +502,7 @@ class HostExchange(ExchangeProtocol):
                                np.ones(int(flat_valid.sum()), bool))
         total = sum(len(p) for p in pages) * (w - 1)
         cnt = int(flat_valid.sum())
-        cap = int(2 ** np.ceil(np.log2(max(cnt, 1))))
+        cap = _pow2(cnt)
         out_cols = {}
         for n, a in flat_cols.items():
             buf = np.zeros((cap,) + a.shape[1:], dtype=a.dtype)

@@ -17,6 +17,14 @@ a pass pipeline over ``PlanNode`` trees:
                            ``max_matches``) from catalog stats + key
                            uniqueness, replacing the ad-hoc ``Sizes``
                            threading the queries used to do by hand.
+* ``place_exchanges``   -- lower the logical plan to a *distributed
+                           fragment plan*: the join-distribution hint and
+                           the Aggregation/Distinct auto modes become
+                           explicit ``Repartition``/``Broadcast`` exchange
+                           nodes (the paper's plan fragments separated by
+                           exchanges), placed only where the planner can
+                           prove the input is still worker-partitioned.
+                           Runs only when ``config.num_workers > 1``.
 
 ``optimize(plan, catalog)`` runs the default pipeline; ``explain(plan)``
 pretty-prints a plan tree (with row bounds when a catalog is given).
@@ -56,6 +64,9 @@ class OptimizerConfig:
     broadcast_row_limit: int = 1 << 16
     # slack added before rounding group capacities to a power of two
     group_slack: int = 8
+    # planned worker count: >1 makes ``place_exchanges`` lower distribution
+    # hints into explicit Repartition/Broadcast exchange nodes
+    num_workers: int = 1
 
 
 DEFAULT_CONFIG = OptimizerConfig()
@@ -101,7 +112,8 @@ def infer_schema(node: P.PlanNode, catalog) -> Dict[str, dt.DType]:
         return {c: src[c] for c in cols}
     if isinstance(node, P.InMemorySource):
         return dict(node.schema)
-    if isinstance(node, (P.Filter, P.Limit, P.OrderBy, P.Exchange)):
+    if isinstance(node, (P.Filter, P.Limit, P.OrderBy, P.Exchange,
+                         P.Repartition, P.Broadcast)):
         return infer_schema(node.child, catalog)
     if isinstance(node, P.Project):
         child = infer_schema(node.child, catalog)
@@ -113,7 +125,15 @@ def infer_schema(node: P.PlanNode, catalog) -> Dict[str, dt.DType]:
             if kind == "count":
                 out[name] = dt.INT32
             elif kind == "avg":
-                out[name] = dt.FLOAT32
+                if node.mode == "partial":
+                    # partial phase emits mergeable sum+count state
+                    out[f"{name}__sum"] = child[col_]
+                    out[f"{name}__cnt"] = dt.INT32
+                else:
+                    out[name] = dt.FLOAT32
+            elif node.mode == "final" and col_ not in child:
+                # final phase consumes partial state named by the output
+                out[name] = child[name]
             else:
                 out[name] = child[col_]
         return out
@@ -151,8 +171,12 @@ def row_bound(node: P.PlanNode, catalog) -> int:
     if isinstance(node, P.InMemorySource):
         vals = list(node.data.values())
         return len(vals[0]) if vals else 0
-    if isinstance(node, (P.Filter, P.Project, P.ScalarBroadcast, P.Exchange)):
+    if isinstance(node, (P.Filter, P.Project, P.ScalarBroadcast, P.Exchange,
+                         P.Repartition)):
         return row_bound(node.children()[0], catalog)
+    if isinstance(node, P.Broadcast):
+        # every worker holds a replica: W copies of each valid row
+        return row_bound(node.child, catalog) * max(node.num_workers, 1)
     if isinstance(node, (P.Aggregation, P.Distinct)):
         keys = node.group_keys if isinstance(node, P.Aggregation) else node.keys
         if not keys:
@@ -206,7 +230,10 @@ def unique_sets(node: P.PlanNode, catalog) -> List[FrozenSet[str]]:
         return [frozenset(u) for u in getattr(src, "unique_keys", ())
                 if set(u) <= cols]
     if isinstance(node, (P.Filter, P.Limit, P.OrderBy, P.Exchange,
-                         P.ScalarBroadcast)):
+                         P.ScalarBroadcast, P.Repartition, P.Broadcast)):
+        # Repartition permutes rows; Broadcast replicates *across* workers
+        # but each worker's slice stays duplicate-free, which is what the
+        # per-worker join build uniqueness (max_matches) relies on.
         return unique_sets(node.children()[0], catalog)
     if isinstance(node, P.Project):
         # translate through pure column renames
@@ -344,9 +371,12 @@ def _prune(node: P.PlanNode, required: Set[str], catalog) -> P.PlanNode:
     if isinstance(node, P.Limit):
         return dataclasses.replace(node,
                                    child=_prune(node.child, required, catalog))
-    if isinstance(node, P.Exchange):
+    if isinstance(node, (P.Exchange, P.Repartition)):
         return dataclasses.replace(
             node, child=_prune(node.child, required | set(node.keys), catalog))
+    if isinstance(node, P.Broadcast):
+        return dataclasses.replace(
+            node, child=_prune(node.child, required, catalog))
     if isinstance(node, P.ScalarBroadcast):
         return dataclasses.replace(
             node,
@@ -428,6 +458,144 @@ def derive_capacities(node: P.PlanNode, catalog,
 
 
 # ---------------------------------------------------------------------------
+# rule 5: physical exchange placement (distributed fragment plans)
+# ---------------------------------------------------------------------------
+
+def infer_distribution(node: P.PlanNode) -> str:
+    """Planner-visible distribution of a node's output across workers.
+
+    Mirrors the driver's runtime stream tracking: ``'partitioned'`` (each
+    worker holds a disjoint row slice) or ``'replicated'`` (every worker
+    holds all rows). Blocking global operators (OrderBy/Limit) and explicit
+    Broadcast nodes replicate; sources and hash exchanges partition.
+    """
+    if isinstance(node, P.OrderBy) and node.local:
+        return infer_distribution(node.child)
+    if isinstance(node, (P.OrderBy, P.Limit, P.Broadcast)):
+        return "replicated"
+    if isinstance(node, (P.TableScan, P.InMemorySource, P.Exchange,
+                         P.Repartition)):
+        return "partitioned"
+    if isinstance(node, P.Join):
+        return infer_distribution(node.probe)
+    kids = node.children()
+    return infer_distribution(kids[0]) if kids else "partitioned"
+
+
+def _shuffle_key_position(keys: Sequence[str],
+                          schema: Dict[str, dt.DType]) -> Optional[int]:
+    """Position of a single stand-in shuffle key, or None to keep all keys.
+
+    Hash-partitioning on any non-empty key subset keeps equal full keys on
+    one worker, so when the key list drags byte-matrix columns through the
+    hash, a single int/date column can stand in for all of them. The
+    subset is taken only when it actually removes byte hashing: without
+    per-column cardinality stats a lone low-cardinality int key could skew
+    the shuffle, so key lists that are already cheap to hash (ints, dicts)
+    are kept whole — the full composite hash spreads at least as well.
+    """
+    if not any(schema[k].name == "bytes" for k in keys):
+        return None
+    return next((i for i, k in enumerate(keys)
+                 if schema[k].name in ("int32", "date32")), None)
+
+
+def _shuffle_keys(keys: Sequence[str],
+                  schema: Dict[str, dt.DType]) -> List[str]:
+    """Minimal co-location-preserving shuffle key subset (see
+    ``_shuffle_key_position``)."""
+    pos = _shuffle_key_position(keys, schema)
+    return [keys[pos]] if pos is not None else list(keys)
+
+
+def place_exchanges(node: P.PlanNode, catalog,
+                    config: OptimizerConfig = DEFAULT_CONFIG) -> P.PlanNode:
+    """Lower distribution hints to explicit exchange nodes (physical plan).
+
+    With ``config.num_workers > 1`` the stats-driven join-distribution
+    decision stops being a hint the driver interprets and becomes plan
+    structure: a 'partitioned' join gets ``Repartition`` nodes on both
+    sides (hash-exchange on the join keys), a 'broadcast' join gets a
+    ``Broadcast`` around its build side, auto Aggregations lower to
+    partial -> Repartition/Broadcast -> final fragments, Distinct lowers to
+    partial-dedup -> Repartition -> final-dedup, and the inputs of global
+    operators (OrderBy/Limit, scalar subqueries) are broadcast. Exchanges
+    are placed only where the child is provably still worker-partitioned
+    (``infer_distribution``) — exchanging an already-replicated input would
+    duplicate rows. The rule is idempotent: lowered joins are 'local',
+    lowered aggregations carry explicit partial/final modes, and replicated
+    inputs are never re-wrapped.
+    """
+    w = config.num_workers
+    if w <= 1:
+        return node
+    new = replace_children(
+        node, [place_exchanges(c, catalog, config) for c in node.children()])
+
+    if isinstance(new, P.Join) and new.distribution != "local":
+        probe_dist = infer_distribution(new.probe)
+        if new.distribution == "broadcast" or probe_dist == "replicated":
+            # replicate the build side; a replicated probe forces this shape
+            # (repartitioning replicas would multiply rows W-fold)
+            if infer_distribution(new.build) == "partitioned":
+                return dataclasses.replace(
+                    new, build=P.Broadcast(new.build, w), distribution="local")
+            return dataclasses.replace(new, distribution="local")
+        # both sides must shuffle on the same key positions; a single
+        # cheap position stands in for byte-heavy composite keys (see
+        # _shuffle_key_position for the skew rationale)
+        pos = _shuffle_key_position(new.build_keys,
+                                    infer_schema(new.build, catalog))
+        probe_keys = ([new.probe_keys[pos]] if pos is not None
+                      else list(new.probe_keys))
+        build_keys = ([new.build_keys[pos]] if pos is not None
+                      else list(new.build_keys))
+        build = new.build
+        if infer_distribution(build) == "partitioned":
+            build = P.Repartition(build, build_keys)
+        return dataclasses.replace(
+            new, build=build,
+            probe=P.Repartition(new.probe, probe_keys),
+            distribution="local")
+
+    if (isinstance(new, P.Aggregation) and new.mode == "auto"
+            and infer_distribution(new.child) == "partitioned"):
+        partial = dataclasses.replace(new, mode="partial")
+        if new.group_keys:
+            keys = _shuffle_keys(new.group_keys,
+                                 infer_schema(new.child, catalog))
+            shuffle = P.Repartition(partial, keys)
+        else:
+            shuffle = P.Broadcast(partial, w)
+        return dataclasses.replace(new, child=shuffle, mode="final")
+
+    if (isinstance(new, P.Distinct) and new.mode == "auto"
+            and infer_distribution(new.child) == "partitioned"):
+        partial = dataclasses.replace(new, mode="partial")
+        keys = _shuffle_keys(new.keys, infer_schema(new.child, catalog))
+        return dataclasses.replace(
+            new, child=P.Repartition(partial, keys), mode="final")
+
+    if isinstance(new, P.OrderBy) and not new.local:
+        if infer_distribution(new.child) == "partitioned":
+            child = new.child
+            if new.limit is not None:
+                # distributed top-N: per-worker local top-limit first, so
+                # the gather moves W*limit candidate rows, not everything
+                child = dataclasses.replace(new, local=True)
+            return dataclasses.replace(new, child=P.Broadcast(child, w))
+    elif isinstance(new, P.Limit):
+        if infer_distribution(new.child) == "partitioned":
+            return dataclasses.replace(new, child=P.Broadcast(new.child, w))
+
+    if isinstance(new, P.ScalarBroadcast):
+        if infer_distribution(new.scalar) == "partitioned":
+            return dataclasses.replace(new, scalar=P.Broadcast(new.scalar, w))
+
+    return new
+
+
+# ---------------------------------------------------------------------------
 # device-memory footprint estimation (admission control input)
 # ---------------------------------------------------------------------------
 
@@ -500,6 +668,17 @@ def estimate_memory(plan: P.PlanNode, catalog, num_workers: int = 1,
         elif isinstance(node, (P.OrderBy, P.Limit, P.Exchange)):
             width = row_width(infer_schema(node.children()[0], catalog))
             total += width * bounded_rows(node.children()[0])
+        elif isinstance(node, P.Repartition):
+            # blocking: child materialized into [W, W, cap] send layout,
+            # then received into same-sized worker-stacked buffers
+            width = row_width(infer_schema(node.child, catalog))
+            total += 2 * width * bounded_rows(node.child)
+        elif isinstance(node, P.Broadcast):
+            # W-stacked replicas: every worker pins a copy of all rows,
+            # plus the materialized input being replicated
+            width = row_width(infer_schema(node.child, catalog))
+            repl = max(node.num_workers, w)
+            total += width * bounded_rows(node.child) * (repl + 1)
         for c in node.children():
             visit(c)
 
@@ -512,7 +691,7 @@ def estimate_memory(plan: P.PlanNode, catalog, num_workers: int = 1,
 # ---------------------------------------------------------------------------
 
 DEFAULT_RULES = (push_filters, prune_columns, choose_join_distribution,
-                 derive_capacities)
+                 derive_capacities, place_exchanges)
 
 
 def optimize(plan: P.PlanNode, catalog, rules=DEFAULT_RULES,
@@ -590,7 +769,8 @@ def _describe(node: P.PlanNode) -> str:
         return (f"Aggregation(keys=[{keys}], aggs=[{aggs}], "
                 f"max_groups={node.max_groups}, mode={node.mode})")
     if isinstance(node, P.Distinct):
-        return f"Distinct(keys=[{', '.join(node.keys)}], max_groups={node.max_groups})"
+        return (f"Distinct(keys=[{', '.join(node.keys)}], "
+                f"max_groups={node.max_groups}, mode={node.mode})")
     if isinstance(node, P.Join):
         pay = (f", payload=[{', '.join(node.build_payload)}]"
                if node.build_payload else "")
@@ -603,11 +783,16 @@ def _describe(node: P.PlanNode) -> str:
         keys = ", ".join(k + (" desc" if d else "")
                          for k, d in zip(node.keys, desc))
         lim = f", limit={node.limit}" if node.limit is not None else ""
-        return f"OrderBy(keys=[{keys}]{lim})"
+        loc = ", local" if node.local else ""
+        return f"OrderBy(keys=[{keys}]{lim}{loc})"
     if isinstance(node, P.Limit):
         return f"Limit({node.n})"
     if isinstance(node, P.ScalarBroadcast):
         return f"ScalarBroadcast(columns=[{', '.join(node.columns)}])"
     if isinstance(node, P.Exchange):
         return f"Exchange(keys=[{', '.join(node.keys)}])"
+    if isinstance(node, P.Repartition):
+        return f"Repartition(keys=[{', '.join(node.keys)}])"
+    if isinstance(node, P.Broadcast):
+        return f"Broadcast(num_workers={node.num_workers})"
     return type(node).__name__

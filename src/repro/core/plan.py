@@ -78,11 +78,17 @@ class Aggregation(PlanNode):
 
 @dataclasses.dataclass
 class Distinct(PlanNode):
-    """Unique rows over ``keys`` (grouped dedup, static capacity)."""
+    """Unique rows over ``keys`` (grouped dedup, static capacity).
+
+    mode 'auto' lets the driver insert the cross-worker dedup exchange at
+    runtime; the optimizer's exchange placement lowers it to an explicit
+    'partial' (worker-local dedup) -> Repartition -> 'final' fragment pair.
+    """
 
     child: PlanNode
     keys: Sequence[str]
     max_groups: int = 4096
+    mode: str = "auto"          # auto | partial | final
 
     def children(self):
         return [self.child]
@@ -112,12 +118,18 @@ class Join(PlanNode):
 
 @dataclasses.dataclass
 class OrderBy(PlanNode):
-    """Global sort (optionally top-``limit``); blocking operator."""
+    """Global sort (optionally top-``limit``); blocking operator.
+
+    ``local=True`` sorts each worker's slice independently (no gather) —
+    the planner's distributed top-N lowering places a local OrderBy below
+    the exchange so only ``W * limit`` candidate rows are broadcast.
+    """
 
     child: PlanNode
     keys: Sequence[str]
     descending: Optional[Sequence[bool]] = None
     limit: Optional[int] = None
+    local: bool = False
 
     def children(self):
         return [self.child]
@@ -150,6 +162,32 @@ class Exchange(PlanNode):
     """Explicit repartition on ``keys`` (hash exchange across workers)."""
     child: PlanNode
     keys: Sequence[str]
+
+    def children(self):
+        return [self.child]
+
+
+@dataclasses.dataclass
+class Repartition(PlanNode):
+    """Physical exchange: hash-partition the child's rows on ``keys`` so
+    equal keys land on the same worker. Placed by the optimizer's
+    ``place_exchanges`` rule (partitioned joins, two-phase aggregation);
+    executed through the session's ``ExchangeProtocol``."""
+    child: PlanNode
+    keys: Sequence[str]
+
+    def children(self):
+        return [self.child]
+
+
+@dataclasses.dataclass
+class Broadcast(PlanNode):
+    """Physical exchange: replicate every worker's valid rows to all
+    ``num_workers`` workers (broadcast-join build sides, global-aggregation
+    partials, scalar subqueries). Carries the planned worker count so plans
+    placed for different cluster sizes fingerprint differently."""
+    child: PlanNode
+    num_workers: int = 1
 
     def children(self):
         return [self.child]

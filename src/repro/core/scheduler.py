@@ -369,14 +369,16 @@ class QueryScheduler:
     def _optimized(self, plan: P.PlanNode,
                    raw_key: str) -> Tuple[P.PlanNode, bool]:
         """Optimized plan via the plan cache (keyed on the raw tree's
-        already-computed fingerprint). Versions are snapshot *before*
-        optimization, which reads catalog statistics."""
-        key = "opt:" + raw_key
+        already-computed fingerprint plus the planned worker count —
+        exchange placement makes the physical plan W-dependent). Versions
+        are snapshot *before* optimization, which reads catalog stats."""
+        key = f"opt:w{self.session.num_workers}:" + raw_key
         cached = self.plan_cache.get(key, self.session.catalog)
         if cached is not None:
             return cached, True
         versions = self.session.catalog.versions(referenced_tables(plan))
-        optimized = optimize(plan, self.session.catalog)
+        optimized = optimize(plan, self.session.catalog,
+                             config=self.session.optimizer_config())
         self.plan_cache.put(key, versions, optimized)
         return optimized, False
 

@@ -322,10 +322,20 @@ class Session:
         from .builder import QueryBuilder
         return QueryBuilder.scan(self.catalog, name, columns, session=self)
 
+    def optimizer_config(self):
+        """This session's ``OptimizerConfig`` (worker count threaded in so
+        exchange placement plans for the session's cluster size)."""
+        from .optimizer import DEFAULT_CONFIG
+        return dataclasses.replace(DEFAULT_CONFIG,
+                                   num_workers=self.num_workers)
+
     def optimize(self, plan: PlanNode) -> PlanNode:
-        """Run the rule-based logical optimizer over a plan tree."""
+        """Run the rule-based logical optimizer over a plan tree. With
+        ``num_workers > 1`` this includes physical exchange placement: the
+        returned tree is a distributed fragment plan with explicit
+        ``Repartition``/``Broadcast`` nodes."""
         from .optimizer import optimize
-        return optimize(plan, self.catalog)
+        return optimize(plan, self.catalog, config=self.optimizer_config())
 
     def explain(self, plan: PlanNode, analyze: bool = False) -> str:
         """Pretty-print a plan before and after optimization.
@@ -333,9 +343,12 @@ class Session:
         With ``analyze=True`` the (optimized) plan is also executed and the
         executor's per-table scan stats -- bytes read, bytes transferred,
         chunks skipped by zone maps, prefetch-overlap fraction -- plus
-        operator timings are appended (EXPLAIN ANALYZE)."""
+        operator timings and per-fragment exchange stats (rows/bytes moved,
+        host-staged bytes per Repartition/Broadcast) are appended
+        (EXPLAIN ANALYZE)."""
         from .optimizer import explain_before_after
-        text = explain_before_after(plan, self.catalog)
+        text = explain_before_after(plan, self.catalog,
+                                    config=self.optimizer_config())
         if not analyze:
             return text
         self.execute(self.optimize(plan))
@@ -351,4 +364,11 @@ class Session:
                 f"prefetch_overlap={s['prefetch_overlap']:.2f}")
         for op, sec in sorted(stats.get("op_seconds", {}).items()):
             lines.append(f"op {op}: {sec:.4f}s")
+        for frag, ex in stats.get("exchanges", {}).items():
+            lines.append(
+                f"exchange {frag} [{stats.get('exchange_protocol')}]: "
+                f"rounds={ex['rounds']} rows_moved={ex['rows_moved']} "
+                f"bytes_moved={ex['bytes_moved']} "
+                f"host_staged_bytes={ex['host_staged_bytes']} "
+                f"{ex['seconds']:.4f}s")
         return text + "\n" + "\n".join(lines)

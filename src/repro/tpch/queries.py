@@ -17,12 +17,13 @@ pure-numpy oracle in oracle.py.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict
 
 from ..core import plan as P
 from ..core.builder import table as _t
 from ..core.expr import col, date_lit, lit, prefix_code, year
-from ..core.optimizer import optimize
+from ..core.optimizer import DEFAULT_CONFIG, optimize
 from . import schema as S
 
 _D = date_lit
@@ -654,8 +655,18 @@ QUERIES: Dict[int, Callable] = {
 }
 
 
-def build_query(qnum: int, catalog, optimized: bool = True) -> P.PlanNode:
+def build_query(qnum: int, catalog, optimized: bool = True,
+                num_workers: int = 1) -> P.PlanNode:
     """Logical plan for query ``qnum``, run through the optimizer pipeline
-    (pass ``optimized=False`` for the raw tree)."""
+    (pass ``optimized=False`` for the raw tree).
+
+    With ``num_workers > 1`` the optimizer also places physical exchanges:
+    the returned tree is a distributed fragment plan whose
+    ``Repartition``/``Broadcast`` nodes target that worker count (execute it
+    on a session with the same ``num_workers``).
+    """
     plan = QUERIES[qnum](catalog)
-    return optimize(plan, catalog) if optimized else plan
+    if not optimized:
+        return plan
+    cfg = dataclasses.replace(DEFAULT_CONFIG, num_workers=num_workers)
+    return optimize(plan, catalog, config=cfg)

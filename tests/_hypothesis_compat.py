@@ -1,11 +1,25 @@
 """Optional-``hypothesis`` shim for the tier-1 suite.
 
-When hypothesis is installed, re-exports the real ``given``/``settings``/
-``strategies``. When it is not, property tests are collected but skipped,
-so the rest of the suite (parametrized/example tests) still runs.
+Two levels of degradation:
+
+* ``given``/``settings``/``st`` — re-exported verbatim when hypothesis is
+  installed; without it, ``@given`` tests are collected but skipped (their
+  strategies are opaque hypothesis objects we cannot draw from).
+
+* ``seeded_given`` + the mini-strategies ``sampled``/``ints``/``bools`` —
+  property tests written against these run under the real hypothesis engine
+  when it is installed (strategies convert via ``to_hypothesis``), and
+  degrade to ``max_examples`` deterministic seeded-random draws when it is
+  not, so differential harnesses (e.g. the distributed TPC-H oracle suite)
+  keep their coverage on hypothesis-less environments instead of skipping.
 """
 
 from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
 
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
@@ -34,3 +48,95 @@ except ImportError:
 
     def settings(*args, **kwargs):
         return lambda fn: fn
+
+
+# ---------------------------------------------------------------------------
+# seeded-random-degradable mini-strategies
+# ---------------------------------------------------------------------------
+
+class SeededStrategy:
+    """A value generator usable both ways: ``draw(rng)`` for the seeded
+    fallback, ``to_hypothesis()`` when the real engine is available."""
+
+    def draw(self, rng: random.Random):
+        raise NotImplementedError
+
+    def to_hypothesis(self):
+        raise NotImplementedError
+
+
+class _Sampled(SeededStrategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def draw(self, rng):
+        return rng.choice(self.options)
+
+    def to_hypothesis(self):
+        from hypothesis import strategies as hst
+        return hst.sampled_from(self.options)
+
+
+class _Ints(SeededStrategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+    def to_hypothesis(self):
+        from hypothesis import strategies as hst
+        return hst.integers(min_value=self.lo, max_value=self.hi)
+
+
+def sampled(*options) -> SeededStrategy:
+    """Uniform choice from ``options`` (st.sampled_from analogue)."""
+    return _Sampled(options)
+
+
+def ints(lo: int, hi: int) -> SeededStrategy:
+    """Uniform integer in [lo, hi] (st.integers analogue)."""
+    return _Ints(lo, hi)
+
+
+def bools() -> SeededStrategy:
+    """True/False (st.booleans analogue)."""
+    return _Sampled([False, True])
+
+
+def seeded_given(max_examples: int = 20, _seed=None, **strats: SeededStrategy):
+    """Property decorator with seeded-random degradation.
+
+    With hypothesis installed this is ``@settings(max_examples=...,
+    deadline=None) @given(**converted)``. Without it, the test body runs
+    ``max_examples`` times with keyword arguments drawn from a
+    ``random.Random`` seeded deterministically (``_seed`` or a digest of
+    the test name), so failures reproduce run-to-run; strategy kwargs may
+    use any name that isn't ``max_examples``/``_seed``. Pytest fixtures
+    still flow through positionally/by name as usual.
+    """
+    if HAVE_HYPOTHESIS:
+        def deco(fn):
+            hyp = {k: s.to_hypothesis() for k, s in strats.items()}
+            return settings(max_examples=max_examples,
+                            deadline=None)(given(**hyp)(fn))
+        return deco
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            base = _seed if _seed is not None else zlib.crc32(
+                fn.__name__.encode())
+            for i in range(max_examples):
+                rng = random.Random(base * 1_000_003 + i)
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+        # hide the drawn parameters from pytest's fixture resolution: the
+        # wrapper's visible signature is fn's minus the strategy kwargs,
+        # and __wrapped__ must go or pytest unwraps to fn and sees them
+        sig = inspect.signature(fn)
+        run.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        del run.__wrapped__
+        return run
+    return deco

@@ -235,6 +235,96 @@ def test_join_distribution_choice(catalog):
 
 
 # ---------------------------------------------------------------------------
+# optimizer rule 5: physical exchange placement (fragment plans)
+# ---------------------------------------------------------------------------
+
+def test_place_exchanges_noop_at_one_worker(catalog):
+    plan = queries.build_query(5, catalog, num_workers=1)
+    assert not _find(plan, P.Repartition) and not _find(plan, P.Broadcast)
+
+
+def test_place_exchanges_broadcast_join(catalog):
+    _register_rows(catalog, "big_t", 4096)
+    _register_rows(catalog, "small_t", 64)
+    cfg = opt.OptimizerConfig(num_workers=4)
+    placed = opt.optimize(
+        P.Join(probe=P.TableScan("big_t"), build=P.TableScan("small_t"),
+               probe_keys=["k"], build_keys=["k"], build_payload=["v"]),
+        catalog, config=cfg)
+    # small build replicated, join becomes co-partitioned ('local')
+    assert placed.distribution == "local"
+    assert isinstance(placed.build, P.Broadcast)
+    assert placed.build.num_workers == 4
+    assert not _find(placed, P.Repartition)
+
+
+def test_place_exchanges_partitioned_join(catalog):
+    _register_rows(catalog, "big_t", (1 << 16) + 1)
+    cfg = opt.OptimizerConfig(num_workers=2)
+    placed = opt.optimize(
+        P.Join(probe=P.TableScan("big_t"), build=P.TableScan("big_t"),
+               probe_keys=["k"], build_keys=["k"], build_payload=["v"]),
+        catalog, config=cfg)
+    assert placed.distribution == "local"
+    assert isinstance(placed.probe, P.Repartition)
+    assert isinstance(placed.build, P.Repartition)
+    assert list(placed.probe.keys) == ["k"]
+
+
+def test_place_exchanges_lowers_two_phase_aggregation(catalog):
+    cfg = opt.OptimizerConfig(num_workers=4)
+    placed = opt.optimize(
+        P.Aggregation(P.TableScan("lineitem"), ["l_returnflag"],
+                      [("n", "count", None)]), catalog, config=cfg)
+    assert placed.mode == "final"
+    assert isinstance(placed.child, P.Repartition)
+    assert list(placed.child.keys) == ["l_returnflag"]
+    assert placed.child.child.mode == "partial"
+    # global (keyless) aggregation broadcasts the partials instead
+    global_agg = opt.optimize(
+        P.Aggregation(P.TableScan("lineitem"), [],
+                      [("n", "count", None)]), catalog, config=cfg)
+    assert global_agg.mode == "final"
+    assert isinstance(global_agg.child, P.Broadcast)
+
+
+def test_place_exchanges_never_exchanges_replicated_input(catalog):
+    """An OrderBy output is replicated on every worker; exchanging it again
+    would duplicate rows, so placement must stop at the Broadcast there."""
+    cfg = opt.OptimizerConfig(num_workers=4)
+    inner = P.OrderBy(P.TableScan("nation"), keys=["n_name"], limit=5)
+    placed = opt.optimize(
+        P.Aggregation(inner, ["n_regionkey"], [("n", "count", None)]),
+        catalog, config=cfg)
+    # the aggregation over a replicated child stays single-phase ('auto')
+    assert placed.mode == "auto"
+    assert not isinstance(placed.child, P.Repartition)
+
+
+def test_place_exchanges_is_idempotent(catalog):
+    cfg = opt.OptimizerConfig(num_workers=4)
+    once = queries.build_query(5, catalog, num_workers=4)
+    twice = opt.place_exchanges(once, catalog, cfg)
+    assert P.fingerprint(once) == P.fingerprint(twice)
+
+
+def test_fingerprint_distinguishes_worker_counts(catalog):
+    w1 = queries.build_query(3, catalog, num_workers=1)
+    w4 = queries.build_query(3, catalog, num_workers=4)
+    assert P.fingerprint(w1) != P.fingerprint(w4)
+
+
+def test_estimate_memory_prices_w_stacked_intermediates(catalog):
+    """Broadcast replicas grow with W, so the admission estimate of a
+    placed fragment plan must grow with worker count too."""
+    plans = {w: queries.build_query(5, catalog, num_workers=w)
+             for w in (1, 2, 4)}
+    est = {w: opt.estimate_memory(p, catalog, num_workers=w)
+           for w, p in plans.items()}
+    assert est[1] < est[2] < est[4]
+
+
+# ---------------------------------------------------------------------------
 # optimizer rule 4: capacity hints from stats
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,235 @@
+"""Unit-level properties of the exchange layer (paper §3.3–3.4).
+
+Property-checked (seeded-random fallback when hypothesis is absent):
+
+* repartition is a permutation of the valid rows — none lost, none
+  duplicated — for arbitrary worker counts, validity patterns, and key
+  skew (including empty inputs and all-rows-to-one-partition);
+* hash-partition placement matches the host-side reference
+  ``_hash_combine_np(keys) % W`` row for row;
+* broadcast yields one identical replica of all valid rows per worker;
+* ``HostExchange`` and ``ICIExchange`` agree on arbitrary tables.
+
+Plus the latent empty-partition bug class (zero-capacity tables crashed
+the ICI layout path) and the protocol-clone stats contract the scheduler
+relies on (clones start zeroed; concurrent queries don't bleed stats).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dtypes as dt
+from repro.core.table import DeviceTable
+from repro.core.exchange import (ExchangeStats, HostExchange, ICIExchange,
+                                 _hash_combine_np)
+
+from _hypothesis_compat import ints, sampled, seeded_given
+
+PROTOCOLS = (ICIExchange, HostExchange)
+
+
+# ---------------------------------------------------------------------------
+# generators
+# ---------------------------------------------------------------------------
+
+def make_table(seed: int, w: int, cap: int, key_mode: str,
+               valid_mode: str) -> DeviceTable:
+    """Worker-stacked [w, cap] table with controlled key skew/validity."""
+    rng = np.random.default_rng(seed)
+    if key_mode == "skew-one":            # every row hashes to one partition
+        k = np.full((w, cap), 7, dtype=np.int32)
+    elif key_mode == "few":               # handful of hot keys
+        k = rng.integers(0, 3, (w, cap)).astype(np.int32)
+    else:                                 # wide domain, negatives included
+        k = rng.integers(-1000, 1000, (w, cap)).astype(np.int32)
+    v = rng.random((w, cap)).astype(np.float32)
+    if valid_mode == "none":
+        valid = np.zeros((w, cap), dtype=bool)
+    elif valid_mode == "one-worker":      # all data on worker 0
+        valid = np.zeros((w, cap), dtype=bool)
+        valid[0] = True
+    else:
+        valid = rng.random((w, cap)) < 0.7
+    return DeviceTable({"k": jnp.asarray(k), "v": jnp.asarray(v)},
+                       jnp.asarray(valid),
+                       {"k": dt.INT32, "v": dt.FLOAT32})
+
+
+def valid_rows(table: DeviceTable):
+    """Sorted multiset of (key, value) pairs over all workers."""
+    valid = np.asarray(table.validity)
+    k = np.asarray(table.columns["k"])[valid]
+    v = np.asarray(table.columns["v"])[valid]
+    return sorted(zip(k.tolist(), v.tolist()))
+
+
+def rows_per_worker(table: DeviceTable):
+    """List (one entry per worker) of sorted (key, value) multisets."""
+    valid = np.asarray(table.validity)
+    k = np.asarray(table.columns["k"])
+    v = np.asarray(table.columns["v"])
+    return [sorted(zip(k[wk][valid[wk]].tolist(), v[wk][valid[wk]].tolist()))
+            for wk in range(valid.shape[0])]
+
+
+CONFIG = dict(seed=ints(0, 10_000), w=sampled(1, 2, 4),
+              cap=sampled(1, 7, 64),
+              key_mode=sampled("random", "few", "skew-one"),
+              valid_mode=sampled("random", "none", "one-worker"))
+
+
+# ---------------------------------------------------------------------------
+# repartition properties
+# ---------------------------------------------------------------------------
+
+@seeded_given(max_examples=25, **CONFIG)
+def test_repartition_is_permutation(seed, w, cap, key_mode, valid_mode):
+    table = make_table(seed, w, cap, key_mode, valid_mode)
+    want = valid_rows(table)
+    for proto in PROTOCOLS:
+        out = proto().repartition(table, ("k",), w)
+        assert valid_rows(out) == want, proto.__name__
+
+
+@seeded_given(max_examples=25, **CONFIG)
+def test_repartition_placement_matches_host_hash(seed, w, cap, key_mode,
+                                                 valid_mode):
+    table = make_table(seed, w, cap, key_mode, valid_mode)
+    for proto in PROTOCOLS:
+        out = proto().repartition(table, ("k",), w)
+        valid = np.asarray(out.validity)
+        keys = np.asarray(out.columns["k"])
+        for wk in range(w):
+            got = keys[wk][valid[wk]]
+            if got.size:
+                pids = _hash_combine_np([got.astype(np.int32)]) % w
+                assert (pids == wk).all(), (proto.__name__, wk)
+
+
+@seeded_given(max_examples=15, **CONFIG)
+def test_protocols_agree(seed, w, cap, key_mode, valid_mode):
+    """Host-staged and device-native shuffles are observationally equal:
+    same rows on the same workers (placement is defined by the hash)."""
+    table = make_table(seed, w, cap, key_mode, valid_mode)
+    ici = ICIExchange().repartition(table, ("k",), w)
+    host = HostExchange().repartition(table, ("k",), w)
+    assert rows_per_worker(ici) == rows_per_worker(host)
+
+
+# ---------------------------------------------------------------------------
+# broadcast properties
+# ---------------------------------------------------------------------------
+
+@seeded_given(max_examples=15, **CONFIG)
+def test_broadcast_replicas_identical(seed, w, cap, key_mode, valid_mode):
+    table = make_table(seed, w, cap, key_mode, valid_mode)
+    want = valid_rows(table)
+    for proto in PROTOCOLS:
+        out = proto().broadcast(table, w)
+        per_worker = rows_per_worker(out)
+        assert len(per_worker) == w, proto.__name__
+        for replica in per_worker:
+            assert replica == want, proto.__name__
+
+
+# ---------------------------------------------------------------------------
+# empty-partition bug class: zero-capacity tables
+# ---------------------------------------------------------------------------
+
+def _zero_cap_table(w: int) -> DeviceTable:
+    return DeviceTable({"k": jnp.zeros((w, 0), jnp.int32),
+                        "v": jnp.zeros((w, 0), jnp.float32)},
+                       jnp.zeros((w, 0), dtype=bool),
+                       {"k": dt.INT32, "v": dt.FLOAT32})
+
+
+def test_zero_capacity_repartition():
+    """[W, 0] tables (everything filtered upstream) must shuffle cleanly:
+    the ICI layout path used to crash in jnp.take on the empty row axis."""
+    for w in (1, 2, 4):
+        for proto in PROTOCOLS:
+            out = proto().repartition(_zero_cap_table(w), ("k",), w)
+            assert int(np.asarray(out.validity).sum()) == 0, proto.__name__
+            # downstream operators need at least one row slot
+            assert out.validity.shape[-1] >= 1, proto.__name__
+
+
+def test_zero_capacity_broadcast():
+    for w in (1, 2, 4):
+        for proto in PROTOCOLS:
+            out = proto().broadcast(_zero_cap_table(w), w)
+            assert int(np.asarray(out.validity).sum()) == 0, proto.__name__
+            assert out.validity.shape == (w, out.validity.shape[1])
+            assert out.validity.shape[-1] >= 1, proto.__name__
+
+
+# ---------------------------------------------------------------------------
+# clone() stats contract (scheduler gives each query its own clone)
+# ---------------------------------------------------------------------------
+
+def test_clone_starts_with_zeroed_stats():
+    table = make_table(0, 4, 32, "random", "random")
+    for proto in PROTOCOLS:
+        ex = proto()
+        ex.repartition(table, ("k",), 4)
+        ex.broadcast(table, 4)
+        assert ex.stats.rounds > 0
+        clone = ex.clone()
+        assert clone.stats == ExchangeStats(), proto.__name__
+        assert clone.stats is not ex.stats, proto.__name__
+        # configuration is preserved
+        if isinstance(ex, HostExchange):
+            assert clone.page_rows == ex.page_rows
+        else:
+            assert clone.mesh is ex.mesh and clone.axis == ex.axis
+
+
+def test_clone_stats_do_not_bleed_between_queries():
+    """Two clones of one protocol accumulate independently and leave the
+    original untouched (one clone per concurrent scheduler query)."""
+    table_small = make_table(1, 2, 8, "random", "random")
+    table_big = make_table(2, 2, 128, "random", "random")
+    for proto in PROTOCOLS:
+        parent = proto()
+        a, b = parent.clone(), parent.clone()
+        a.repartition(table_small, ("k",), 2)
+        b.repartition(table_big, ("k",), 2)
+        b.repartition(table_big, ("k",), 2)
+        assert parent.stats == ExchangeStats(), proto.__name__
+        assert a.stats.rounds == 1 and b.stats.rounds == 2, proto.__name__
+        assert a.stats.bytes_moved != b.stats.bytes_moved or \
+            a.stats.rows_moved != b.stats.rows_moved, proto.__name__
+
+
+def test_scheduler_clones_isolate_per_query_exchange_stats():
+    """End-to-end: concurrent scheduled queries each report their own
+    exchange fragments; the session's template protocol stays zeroed."""
+    from repro.core import Catalog, Session
+    from repro.core.expr import col
+
+    rng = np.random.default_rng(0)
+    catalog = Catalog()
+    catalog.register_numpy(
+        "t", {"k": rng.integers(0, 50, 4096).astype(np.int32),
+              "x": rng.random(4096).astype(np.float32)},
+        {"k": dt.INT32, "x": dt.FLOAT32})
+    template = ICIExchange()
+    session = Session(catalog, num_workers=2, exchange=template,
+                      batch_rows=1024)
+    # distinct filters -> distinct fingerprints -> no coalescing
+    handles = [
+        session.submit(session.table("t")
+                       .filter(col("k") >= 10 * i)
+                       .group_by("k").agg(n=("count", None)))
+        for i in range(3)
+    ]
+    session.gather(*handles)
+    assert template.stats == ExchangeStats()
+    for h in handles:
+        frags = h.executor_stats["exchanges"]
+        assert frags, "expected at least one exchange fragment per query"
+        assert sum(f["rounds"] for f in frags.values()) > 0
+        assert all(f["host_staged_bytes"] == 0 for f in frags.values())
+    session.reset_scheduler()

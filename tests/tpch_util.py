@@ -62,7 +62,11 @@ def assert_results_match(engine: dict, oracle: dict, qnum: int,
         ea, oa = engine[c], oracle[c]
         if isinstance(ea, np.ndarray) and ea.ndim > 1 and ea.dtype == np.uint8:
             ea = np.array([r.tobytes() for r in ea])
-        if n_o and isinstance(oracle[c][0], bytes):
+        if isinstance(oa, np.ndarray) and oa.ndim > 1 and oa.dtype == np.uint8:
+            # reference side may be another engine result (differential
+            # engine-vs-engine checks): same bytes-row canonicalization
+            oa = np.array([r.tobytes() for r in oa])
+        if n_o and isinstance(oa[0], bytes):
             oa = np.asarray(oa)
             ea = np.asarray(ea)
         np.testing.assert_array_equal(np.asarray(ea)[eo], np.asarray(oa)[oo],
