@@ -20,13 +20,14 @@ def main(argv=None) -> None:
     args = parser.parse_args(argv)
 
     from . import (bench_barebones, bench_cold_hot, bench_concurrency,
-                   bench_cost_perf, bench_exchange, bench_q5_scaling,
-                   bench_scaleup, bench_scan_pipeline, bench_storage_format,
-                   bench_weak_scaling)
+                   bench_cost_perf, bench_exchange, bench_kernels,
+                   bench_q5_scaling, bench_scaleup, bench_scan_pipeline,
+                   bench_storage_format, bench_weak_scaling)
 
     suites = [
         ("storage_format(§2.2)", bench_storage_format.run),
         ("scan_pipeline(§2.2)", bench_scan_pipeline.run),
+        ("kernels(§3.2)", bench_kernels.run),
         ("concurrency(serving)", bench_concurrency.run),
         ("barebones(Table1)", bench_barebones.run),
         ("exchange(Fig5,§3.4)", bench_exchange.run),

@@ -206,12 +206,19 @@ class QueryBuilder:
     # -- joins --------------------------------------------------------------
     def join(self, build: "QueryBuilder", left_on: Sequence[str],
              right_on: Sequence[str], payload: Sequence[str] = (),
-             how: str = "inner") -> "QueryBuilder":
+             how: str = "inner",
+             build_rows: Optional[int] = None) -> "QueryBuilder":
         """Hash join; ``self`` streams as the probe side, ``build`` is
         materialized. ``payload`` names build columns carried into the
-        output (semi/anti joins carry none)."""
+        output (semi/anti joins carry none). ``build_rows`` optionally
+        asserts an upper bound on valid build-side rows (sizes the kernel
+        backend's probe table); when omitted the optimizer derives one
+        from catalog statistics."""
         if how not in ("inner", "left_semi", "left_anti", "left_outer"):
             raise SchemaError(f"join: unknown join type '{how}'")
+        if build_rows is not None and build_rows <= 0:
+            raise SchemaError(
+                f"join: build_rows must be positive, got {build_rows}")
         if len(left_on) != len(right_on) or not left_on:
             raise SchemaError(
                 f"join: key lists must be equal-length and non-empty, "
@@ -246,7 +253,8 @@ class QueryBuilder:
         return self._derive(
             P.Join(probe=self.plan, build=build.plan,
                    probe_keys=list(left_on), build_keys=list(right_on),
-                   build_payload=list(payload), join_type=how),
+                   build_payload=list(payload), join_type=how,
+                   build_rows=build_rows),
             schema)
 
     def semi_join(self, build: "QueryBuilder", left_on: Sequence[str],

@@ -16,6 +16,7 @@ conversion around them, exactly like CudfToVelox/CudfFromVelox insertion.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import inspect
 import time
@@ -23,6 +24,7 @@ from typing import Dict, Iterator, Optional, Sequence
 
 import numpy as np
 
+from ..kernels import ops as kernel_ops
 from . import operators as ops
 from . import plan as P
 from .exchange import ExchangeProtocol, ICIExchange
@@ -50,10 +52,17 @@ class ExecutionContext:
     # queue of `prefetch_depth` morsels (False = synchronous baseline)
     streaming: bool = True
     prefetch_depth: int = 2
+    # physical kernel backend for the hot relational primitives:
+    # 'jnp' | 'pallas'. None resolves at snapshot time to the calling
+    # thread's kernels.ops.current_backend() — an enclosing use_pallas()
+    # scope, else the REPRO_KERNEL_BACKEND env default
+    kernel_backend: Optional[str] = None
 
     def __post_init__(self):
         if self.exchange is None:
             self.exchange = ICIExchange(mesh=self.mesh)
+        if self.kernel_backend is None:
+            self.kernel_backend = kernel_ops.current_backend()
 
     def worker_sharding(self):
         """NamedSharding over the mesh's 'workers' axis (None off-mesh)."""
@@ -132,33 +141,53 @@ class Driver:
         self.op_seconds: Dict[str, float] = {}
         self.conversion_stats: Dict[str, int] = {}
         self.scan_stats: Dict[str, ScanStats] = {}
+        # per-query kernel dispatch counts (kind -> executions of a pallas
+        # kernel: 'probe', 'agg', 'compact', 'partition', 'build')
+        self.kernel_dispatch: Dict[str, int] = {}
         # per-fragment exchange stats: one entry per exchange executed, in
         # execution order ("#0 Repartition(l_orderkey)" -> counter deltas)
         self.exchange_stats: Dict[str, Dict[str, float]] = {}
         self._frag_seq = 0
 
     def executor_stats(self) -> Dict[str, object]:
-        """Per-query executor stats: scan counters, operator timings, and
-        per-fragment exchange counters (rows/bytes moved, host staging)."""
+        """Per-query executor stats: scan counters, operator timings,
+        kernel backend + dispatch counts, and per-fragment exchange
+        counters (rows/bytes moved, host staging)."""
         return {
             "tables": {t: s.summary() for t, s in self.scan_stats.items()},
             "op_seconds": dict(self.op_seconds),
             "conversions": dict(self.conversion_stats),
             "exchange_protocol": self.ctx.exchange.name,
             "exchanges": {k: dict(v) for k, v in self.exchange_stats.items()},
+            "kernel_backend": self.ctx.kernel_backend,
+            "kernel_dispatch": dict(self.kernel_dispatch),
         }
+
+    def _kernel_scope(self):
+        """Backend + dispatch-accounting scope one query runs under."""
+        scope = contextlib.ExitStack()
+        scope.enter_context(kernel_ops.use_backend(self.ctx.kernel_backend))
+        scope.enter_context(
+            kernel_ops.collect_dispatches(self.kernel_dispatch))
+        return scope
 
     # -- public API ----------------------------------------------------------
     def execute(self, node: P.PlanNode) -> DeviceTable:
         """Run the plan; return the result as one device-resident table."""
-        stream = self._stream(node)
-        return self._materialize(stream)
+        with self._kernel_scope():
+            stream = self._stream(node)
+            return self._materialize(stream)
 
     def collect(self, node: P.PlanNode) -> Dict[str, np.ndarray]:
         """Run the plan; return valid rows as host numpy columns
         (deduplicated to worker 0 for replicated results)."""
-        stream = self._stream(node)
-        table = self._materialize_table(stream.batches)
+        with self._kernel_scope():
+            stream = self._stream(node)
+            table = self._materialize_table(stream.batches)
+        return self._collect_host(stream, table)
+
+    def _collect_host(self, stream: "Stream",
+                      table: DeviceTable) -> Dict[str, np.ndarray]:
         if stream.dist == "replicated":
             # all workers hold identical results; take worker 0
             one = DeviceTable(
@@ -386,7 +415,7 @@ class Driver:
 
         join = ops.HashJoin(node.build_keys, node.probe_keys,
                             node.build_payload, node.join_type,
-                            node.max_matches)
+                            node.max_matches, build_rows=node.build_rows)
         join.open()
         join.add_build(build)
         join.seal_build()

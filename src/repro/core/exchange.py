@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..kernels import ops as kernel_ops
 from . import relational as rel
 from .table import DeviceTable
 
@@ -104,13 +105,21 @@ def _row_bytes(table: DeviceTable) -> int:
 # device-side partitioning programs (shared by both protocols' accounting)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(1, 2))
-def _partition_counts(table: DeviceTable, key_names, num_workers: int):
-    """Metadata phase: rows each src worker holds for each dst partition."""
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def _partition_counts(table: DeviceTable, key_names, num_workers: int,
+                      backend: str = "jnp"):
+    """Metadata phase: rows each src worker holds for each dst partition.
+
+    Under the 'pallas' kernel backend the per-worker histogram is the
+    ``radix_histogram`` MXU kernel (invalid rows masked to the dropped
+    ``num_workers`` bin); the jnp one-hot sum is its oracle."""
 
     def per_worker(t: DeviceTable):
         pids = rel.partition_ids([t.columns[k] for k in key_names],
                                  t.validity, num_workers)
+        if backend == "pallas":
+            masked = jnp.where(t.validity, pids, num_workers)
+            return kernel_ops.radix_histogram(masked, num_workers)
         onehot = jax.nn.one_hot(pids, num_workers, dtype=jnp.int32)
         return jnp.sum(onehot * t.validity[:, None].astype(jnp.int32), axis=0)
 
@@ -341,7 +350,11 @@ class ICIExchange(ExchangeProtocol):
         table = self._ensure_rows(table)
         key_names = tuple(key_names)
         # metadata phase (rendezvous handshake): size the receive buffers
-        counts = np.asarray(_partition_counts(table, key_names, num_workers))
+        backend = kernel_ops.current_backend()
+        counts = np.asarray(
+            _partition_counts(table, key_names, num_workers, backend))
+        if backend == "pallas":
+            kernel_ops.count_dispatch("partition")
         out_cap = _pow2(int(counts.sum(axis=0).max()) if counts.size else 1)
         if self.mesh is None:
             # off-mesh: one fused index-math + gather program per round

@@ -28,7 +28,9 @@ from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..kernels import ops as kernel_ops
 from . import dtypes as dt
 from . import relational as rel
 from .expr import Expr
@@ -36,24 +38,52 @@ from .table import DeviceTable, concat_tables
 
 
 def table_op(n_tables: int = 1):
-    """Wrap fn(*tables, *statics) with jit + optional worker-axis vmap."""
+    """Wrap fn(*tables, *statics) with jit + optional worker-axis vmap.
+
+    The compile cache additionally keys on the active kernel backend
+    (``kernels.ops.current_backend``) and on the input tables' leaf
+    shapes/dtypes: the traced program embeds the backend's dispatch
+    decisions (Pallas kernels vs jnp, which can differ per dtype), so
+    'jnp' and 'pallas' sessions never share a compilation and every cache
+    entry corresponds to exactly one trace. Each entry remembers which
+    kernels its trace used and replays them through
+    ``kernels.ops.count_dispatch`` on every call, which is how the driver
+    reports per-query ``kernel_dispatch`` counts.
+    """
 
     def deco(fn):
         @functools.lru_cache(maxsize=None)
-        def compiled(statics, stacked):
+        def compiled(statics, stacked, spec, backend):
+            del spec  # one cache entry (and used-set) per specialization
             body = lambda *tabs: fn(*tabs, *statics)
-            return jax.jit(jax.vmap(body) if stacked else body)
+            used: set = set()
+            return jax.jit(jax.vmap(body) if stacked else body), used
 
         @functools.wraps(fn)
         def wrapper(*args):
             tables, statics = args[:n_tables], args[n_tables:]
             stacked = _is_stacked(tables[0])
-            return compiled(tuple(statics), stacked)(*tables)
+            jitted, used = compiled(tuple(statics), stacked,
+                                    _table_spec(tables),
+                                    kernel_ops.current_backend())
+            with kernel_ops.record_kernels(used):
+                out = jitted(*tables)
+            for kind in kernel_ops.kernel_snapshot(used):
+                kernel_ops.count_dispatch(kind)
+            return out
 
         wrapper.raw = fn
         return wrapper
 
     return deco
+
+
+def _table_spec(tables) -> tuple:
+    """Hashable (structure, leaf shape/dtype) description of the inputs —
+    the same things jax.jit specializes a trace on, so each ``compiled``
+    entry's recorded kernel set describes exactly the program that runs."""
+    leaves, treedef = jax.tree.flatten(tables)
+    return treedef, tuple((l.shape, str(l.dtype)) for l in leaves)
 
 
 def _is_stacked(obj) -> bool:
@@ -329,10 +359,86 @@ class Distinct(Operator):
 # HashJoin
 # ---------------------------------------------------------------------------
 
+# pallas probe eligibility: the open-addressing table must stay
+# VMEM-resident (2^18 slots x 8 B = 2 MiB of a ~16 MiB core, leaving room
+# for the probe blocks); larger builds fall back to the sorted-key path
+MAX_HASH_TABLE_SLOTS = 1 << 18
+EMPTY_KEY = -1
+
+
 @table_op()
 def _build_join_table(build: DeviceTable, build_keys):
     key, _ = rel.join_key([build.columns[k] for k in build_keys])
     return rel.join_build(key, build.validity)
+
+
+@table_op()
+def _build_hash_table(build: DeviceTable, build_keys, table_size: int):
+    key, _ = rel.join_key([build.columns[k] for k in build_keys])
+    rows = jnp.arange(key.shape[0], dtype=jnp.int32)
+    return kernel_ops.build_table(key, rows, table_size,
+                                  empty_key=EMPTY_KEY, valid=build.validity)
+
+
+def _probe_bound(table_keys: np.ndarray) -> int:
+    """Sound ``max_probes`` for a built table: the longest circular run of
+    occupied slots + 1 (a linear probe terminates at the first empty slot),
+    rounded up to a power of two so the static argument stays stable
+    across similarly loaded tables."""
+    occ = (np.asarray(table_keys) != EMPTY_KEY).reshape(
+        -1, table_keys.shape[-1])
+    t = occ.shape[-1]
+    longest = 0
+    for row in occ:
+        if row.all():
+            longest = max(longest, t)
+            continue
+        if not row.any():
+            continue
+        # rotate a free slot to the end so runs never wrap the boundary
+        row = np.roll(row, t - 1 - int(np.where(~row)[0][-1]))
+        edges = np.diff(np.concatenate(([0], row.astype(np.int8), [0])))
+        starts, ends = np.where(edges == 1)[0], np.where(edges == -1)[0]
+        longest = max(longest, int((ends - starts).max()))
+    return min(int(2 ** np.ceil(np.log2(max(longest + 1, 2)))), t)
+
+
+@table_op(n_tables=2)
+def _probe_join_pallas(probe: DeviceTable, hash_state, probe_keys,
+                       build_payload, join_type: str, max_probes: int):
+    """Open-addressing probe (Pallas ``hash_probe``): one table lookup per
+    probe row. Reached only for single exact int-like keys against a build
+    side the planner proved unique (``max_matches == 1``) or for semi/anti
+    joins, where membership alone decides; output row i is probe row i."""
+    build, tk, tv = hash_state
+    key, _ = rel.join_key([probe.columns[k] for k in probe_keys])
+    found, bidx = kernel_ops.hash_probe(tk, tv, key, empty_key=EMPTY_KEY,
+                                        max_probes=max_probes)
+    # a probe key equal to the empty sentinel reads an empty slot as a hit;
+    # no such key occupies the table (seal_build falls back if a valid
+    # build key is EMPTY_KEY), so masking it is exact
+    found = found & probe.validity & (key != EMPTY_KEY)
+    if join_type == "left_semi":
+        return probe.filter(found)
+    if join_type == "left_anti":
+        return probe.filter(probe.validity & ~found)
+
+    safe = jnp.where(found, bidx, 0)
+    cols = dict(probe.columns)
+    schema = dict(probe.schema)
+    for n in build_payload:
+        v = jnp.take(build.columns[n], safe, axis=0)
+        if join_type == "left_outer":
+            # match the jnp path: unmatched probe rows carry zeroed payload
+            mask = found.reshape(found.shape + (1,) * (v.ndim - 1))
+            v = jnp.where(mask, v, jnp.zeros((), v.dtype))
+        cols[n] = v
+        schema[n] = build.schema[n]
+    if join_type == "left_outer":
+        cols["__matched"] = found
+        schema["__matched"] = dt.BOOL
+        return DeviceTable(cols, probe.validity, schema)
+    return DeviceTable(cols, found, schema)
 
 
 @table_op(n_tables=2)
@@ -394,19 +500,33 @@ def _probe_join(probe: DeviceTable, build_state, probe_keys, build_keys,
 class HashJoin(Operator):
     """Streaming probe against a fully materialized build side.
 
-    TPU adaptation of cuDF's hash join: the build side becomes a sorted key
-    array (searchsorted probe) in the pure-JAX path, or an open-addressing
-    table via the Pallas kernel (repro.kernels.hash_join). Hashed
-    multi-column keys are verified after the probe, as in a bucketed hash
-    join. ``max_matches`` is the planner's expansion-capacity hint; the
-    oracle tests assert it is never exceeded.
+    TPU adaptation of cuDF's hash join, with a per-session kernel backend
+    (``kernels.ops.current_backend()``, sampled at ``seal_build``):
+
+    * 'jnp'    -- the build side becomes a sorted key array probed with
+                  searchsorted (doubles as the oracle);
+    * 'pallas' -- single exact int-like keys build an open-addressing
+                  table (``kernels.build_table``, power-of-two slots sized
+                  2x the planner's ``build_rows`` bound) probed by the
+                  ``hash_probe`` kernel. Taken for semi/anti joins and for
+                  ``max_matches == 1`` joins (planner-proved unique build);
+                  expansion joins, hashed composite keys, build keys equal
+                  to the empty sentinel (-1) and oversized builds fall
+                  back to the jnp path, and probe keys equal to the
+                  sentinel are masked to no-match (no such key can occupy
+                  the table).
+
+    Hashed multi-column keys are verified after the probe, as in a
+    bucketed hash join. ``max_matches`` is the planner's
+    expansion-capacity hint; the oracle tests assert it is never exceeded.
     """
 
     name = "HashJoin"
 
     def __init__(self, build_keys: Sequence[str], probe_keys: Sequence[str],
                  build_payload: Sequence[str] = (), join_type: str = "inner",
-                 max_matches: int = 1, compact: bool = True):
+                 max_matches: int = 1, compact: bool = True,
+                 build_rows: Optional[int] = None):
         assert join_type in ("inner", "left_semi", "left_anti", "left_outer")
         self.build_keys = tuple(build_keys)
         self.probe_keys = tuple(probe_keys)
@@ -414,8 +534,11 @@ class HashJoin(Operator):
         self.join_type = join_type
         self.max_matches = max_matches
         self.compact = compact
+        self.build_rows = build_rows     # planner's build-side row bound
         self._build_batches: List[DeviceTable] = []
         self._state = None
+        self._hash_state = None          # (build, table_keys, table_vals)
+        self._max_probes = 0
         self._exact = True
 
     # build side is fed by the driver before probing starts
@@ -423,18 +546,49 @@ class HashJoin(Operator):
         """Accumulate one build-side batch (device-resident)."""
         self._build_batches.append(batch)
 
+    def _try_pallas_build(self, build: DeviceTable) -> bool:
+        """Build the open-addressing table; False -> jnp fallback."""
+        cap = int(build.validity.shape[-1])
+        bound = min(self.build_rows or cap, cap)
+        table_size = max(int(2 ** np.ceil(np.log2(max(2 * bound, 2)))), 2)
+        if table_size > MAX_HASH_TABLE_SLOTS:
+            return False
+        tk, tv = _build_hash_table(build, self.build_keys, table_size)
+        tk_host = np.asarray(tk)
+        # every valid build row must occupy a slot: a shortfall means a key
+        # collided with the empty sentinel (e.g. a -1 key) -- probing that
+        # table would silently drop its matches
+        if int((tk_host != EMPTY_KEY).sum()) != int(
+                np.asarray(build.validity).sum()):
+            return False
+        self._hash_state = (build, tk, tv)
+        self._max_probes = _probe_bound(tk_host)
+        return True
+
     def seal_build(self):
-        """Concatenate and sort the build side; probing may start after."""
+        """Concatenate the build side and build the probe state (sorted
+        keys, or the open-addressing table under the pallas backend);
+        probing may start after."""
         assert self._build_batches, "join build side is empty"
         build = concat_tables(self._build_batches)
         self._build_batches = []
         kt = [build.schema[k] for k in self.build_keys]
         self._exact = (len(kt) == 1 and kt[0].name in
                        ("int32", "date32", "dict32"))
+        eligible = (self._exact
+                    and (self.join_type in ("left_semi", "left_anti")
+                         or self.max_matches == 1))
+        if (kernel_ops.current_backend() == "pallas" and eligible
+                and self._try_pallas_build(build)):
+            return
         bt = _build_join_table(build, self.build_keys)
         self._state = (build, bt)
 
     def add_input(self, batch):
+        if self._hash_state is not None:
+            return [_probe_join_pallas(batch, self._hash_state,
+                                       self.probe_keys, self.build_payload,
+                                       self.join_type, self._max_probes)]
         assert self._state is not None, "probe before build sealed"
         out = _probe_join(batch, self._state, self.probe_keys, self.build_keys,
                           self.build_payload, self.join_type, self.max_matches,

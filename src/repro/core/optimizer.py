@@ -443,8 +443,20 @@ def derive_capacities(node: P.PlanNode, catalog,
             return new
         return dataclasses.replace(new, max_groups=mg)
 
-    if isinstance(new, P.Join) and new.join_type not in ("left_semi",
-                                                         "left_anti"):
+    if isinstance(new, P.Join):
+        if new.build_rows is None:
+            # build-side row bound: sizes the kernel backend's
+            # open-addressing probe table (2x slots for load factor 1/2).
+            # Hand-set hints are kept -- the planner never overrides a
+            # bound the caller asserted.
+            try:
+                br = row_bound(new.build, catalog)
+            except TypeError:
+                br = None
+            if br is not None and br <= MAX_CAPACITY:
+                new = dataclasses.replace(new, build_rows=br)
+        if new.join_type in ("left_semi", "left_anti"):
+            return new
         if _build_side_unique(new, catalog):
             # exact unique key: exactly one candidate row per probe row.
             # hashed (composite/multi-column) unique key: matches beyond the

@@ -111,6 +111,9 @@ class Join(PlanNode):
     join_type: str = "inner"
     max_matches: int = 1
     distribution: str = "broadcast"
+    # planner's upper bound on valid build-side rows (derive_capacities);
+    # sizes the pallas backend's open-addressing probe table
+    build_rows: Optional[int] = None
 
     def children(self):
         return [self.probe, self.build]

@@ -17,7 +17,14 @@ from typing import List, NamedTuple, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops as kernel_ops
+
 INT32_MAX = jnp.iinfo(jnp.int32).max
+
+# pallas segmented_sum accumulates in float32 slabs of GROUP_BLOCK; beyond
+# this capacity (or for 8-byte values) the jnp segment_sum path is both
+# faster to trace and exact, so dispatch falls back
+PALLAS_AGG_GROUP_LIMIT = 1 << 16
 
 
 # ---------------------------------------------------------------------------
@@ -168,10 +175,41 @@ def group_rows(key_cols: List[jax.Array], validity: jax.Array,
 
 def segment_agg(values: jax.Array, gids: jax.Array, order: jax.Array,
                 validity: jax.Array, max_groups: int, kind: str) -> jax.Array:
-    """Aggregate ``values`` per group id. kind in sum|count|min|max."""
+    """Aggregate ``values`` per group id. kind in sum|count|min|max.
+
+    sum/count dispatch to the Pallas ``segmented_sum`` MXU scatter-add when
+    the session's kernel backend is 'pallas' (4-byte values, capacity under
+    ``PALLAS_AGG_GROUP_LIMIT``); min/max and the fallback cases run the
+    ``jax.ops.segment_*`` path, which doubles as the kernel's oracle.
+    """
     v = jnp.take(values, order, axis=0)
     valid_sorted = jnp.take(validity, order)
     seg = jnp.where(valid_sorted, gids, max_groups)
+
+    # float32 accumulation: exact for counts below 2^24 rows per call
+    # (partial counts merge as *integer* sums, which stay on the jnp
+    # path), inexact-by-reduction-order for float sums exactly like any
+    # matmul reduction. Integer sums are excluded -- they must stay exact
+    # past 2^24, which float32 cannot represent.
+    pallas_ok = (kernel_ops.current_backend() == "pallas" and v.ndim == 1
+                 and max_groups <= PALLAS_AGG_GROUP_LIMIT
+                 and ((kind == "sum"
+                       and jnp.issubdtype(v.dtype, jnp.floating)
+                       and v.dtype.itemsize <= 4)
+                      or (kind == "count" and v.shape[0] <= (1 << 24))))
+    if pallas_ok:
+        if kind == "count":
+            acc = valid_sorted.astype(jnp.float32)
+        else:
+            # zero dead rows: their values may be NaN/inf (dead-lane
+            # arithmetic) and 0 * NaN would poison the one-hot matmul
+            acc = jnp.where(valid_sorted, v,
+                            jnp.zeros((), v.dtype)).astype(jnp.float32)
+        out = kernel_ops.segmented_sum(seg, acc, max_groups)
+        if kind == "count":
+            return jnp.round(out).astype(jnp.int32)
+        return out.astype(v.dtype)
+
     n = max_groups + 1
     if kind == "count":
         out = jax.ops.segment_sum(valid_sorted.astype(jnp.int32), seg, n,

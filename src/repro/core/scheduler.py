@@ -50,6 +50,7 @@ import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
+from ..kernels import ops as kernel_ops
 from . import plan as P
 from .driver import Driver
 from .optimizer import estimate_memory, optimize
@@ -102,6 +103,8 @@ class QueryHandle:
         self.estimate = estimate
         self.cache_hit = False
         self.plan_cache_hit = False
+        # kernel backend pinned at submit time (None until admitted)
+        self.kernel_backend: Optional[str] = None
         self._queue_skips = 0          # times passed over by backfilling
         self._versions: tuple = ()     # admission-time catalog snapshot
         self.submitted_at = time.perf_counter()
@@ -254,11 +257,22 @@ class QueryScheduler:
         duplicate of an in-flight query coalesces onto its handle (raising
         that handle's queue priority if the duplicate's is higher).
         """
-        key = P.fingerprint(plan)
+        # the kernel backend is resolved ONCE, here at submit time (the
+        # session's setting, else the submitting thread's use_backend()
+        # scope / env default), and pinned on the handle: the worker's
+        # ExecutionContext executes with exactly this backend, and the
+        # cache keys carry it -- so flipping the backend between submit
+        # and execution can never serve (or store) a result under the
+        # wrong backend's key, and ``with use_pallas(): session.run(q)``
+        # behaves like the batch path
+        backend = (self.session.kernel_backend
+                   or kernel_ops.current_backend())
+        key = f"k={backend}:{P.fingerprint(plan)}"
         # result cache first: a hit skips optimization entirely
         cached = self.result_cache.get(key, self.session.catalog)
         if cached is not None:
             handle = QueryHandle(next(self._ids), plan, priority, 0)
+            handle.kernel_backend = backend
             handle.cache_hit = True
             handle.started_at = time.perf_counter()
             handle._complete(result=cached)
@@ -274,6 +288,7 @@ class QueryScheduler:
             prefetch_depth=self.session.prefetch_depth)
         handle = QueryHandle(next(self._ids), optimized, priority, est)
         handle.plan_cache_hit = plan_hit
+        handle.kernel_backend = backend
         # version snapshot taken NOW: if a table is re-registered while the
         # query runs, the snapshot no longer matches at the next lookup and
         # the (stale) result is never served from cache
@@ -447,6 +462,11 @@ class QueryScheduler:
         handle.started_at = time.perf_counter()
         try:
             ctx = self.session.context()
+            # pin the backend resolved at submit time (the cache key was
+            # computed from it; the worker thread's ambient default may
+            # differ by now)
+            ctx = dataclasses.replace(
+                ctx, kernel_backend=handle.kernel_backend)
             if self.session.exchange is not None:
                 # don't share one protocol's mutable stats across
                 # concurrent queries: each Driver gets a fresh clone

@@ -228,6 +228,12 @@ class Session:
     # synchronous materialize-then-run baseline)
     streaming: bool = True
     prefetch_depth: int = 2
+    # physical kernel backend for the hot relational primitives (join
+    # probe, segmented aggregation, stream compaction, exchange
+    # histogram): 'jnp' (sort-based, the oracle) or 'pallas' (the
+    # repro.kernels Pallas kernels; interpret mode off-TPU). None defers
+    # to the REPRO_KERNEL_BACKEND env var, defaulting to 'jnp'.
+    kernel_backend: Optional[str] = None
     # scheduler knobs (core.scheduler.SchedulerConfig); None = defaults.
     # Assign before the first submit()/run() — the scheduler is built lazily.
     scheduler_config: Optional[object] = None
@@ -243,6 +249,7 @@ class Session:
             mesh=self.mesh,
             streaming=self.streaming,
             prefetch_depth=self.prefetch_depth,
+            kernel_backend=self.kernel_backend,
         )
 
     def execute(self, plan: PlanNode) -> Dict[str, np.ndarray]:
@@ -364,6 +371,11 @@ class Session:
                 f"prefetch_overlap={s['prefetch_overlap']:.2f}")
         for op, sec in sorted(stats.get("op_seconds", {}).items()):
             lines.append(f"op {op}: {sec:.4f}s")
+        kd = stats.get("kernel_dispatch") or {}
+        if kd:
+            lines.append(
+                f"kernels [{stats.get('kernel_backend')}]: "
+                + " ".join(f"{k}={v}" for k, v in sorted(kd.items())))
         for frag, ex in stats.get("exchanges", {}).items():
             lines.append(
                 f"exchange {frag} [{stats.get('exchange_protocol')}]: "

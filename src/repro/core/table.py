@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as kernel_ops
 from .dtypes import DType
 
 Schema = Dict[str, DType]
@@ -143,8 +144,21 @@ class DeviceTable:
 
         cuDF's apply_boolean_mask shrinks the table; with static shapes we
         keep capacity and push dead rows to the tail so downstream kernels
-        touch a dense prefix.
+        touch a dense prefix. Under the 'pallas' kernel backend the
+        compaction addresses come from the ``block_prefix_sum`` kernel
+        (two-level MXU scan) and rows move with one scatter + gather; the
+        jnp path is a stable argsort on the validity mask. Valid rows land
+        identically on both paths (dead-tail contents may differ).
         """
+        if kernel_ops.current_backend() == "pallas":
+            n = self.capacity
+            pos, total = kernel_ops.block_prefix_sum(self.validity)
+            slot = jnp.where(self.validity, pos, n)
+            gather = jnp.zeros((n,), jnp.int32).at[slot].set(
+                jnp.arange(n, dtype=jnp.int32), mode="drop")
+            cols = {name: jnp.take(a, gather, axis=0)
+                    for name, a in self.columns.items()}
+            return DeviceTable(cols, jnp.arange(n) < total, self.schema)
         order = jnp.argsort(~self.validity, stable=True)
         cols = {n: jnp.take(a, order, axis=0) for n, a in self.columns.items()}
         return DeviceTable(cols, jnp.take(self.validity, order), self.schema)

@@ -41,6 +41,8 @@ def block_prefix_sum(mask, row_block: int = ROW_BLOCK,
                      interpret: bool = False):
     """mask [N] -> (exclusive positions [N] int32, total int32)."""
     n = mask.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32), jnp.int32(0)
     row_block = min(row_block, n)
     pad = (-n) % row_block
     m = jnp.pad(mask.astype(jnp.int32), (0, pad))

@@ -2,10 +2,12 @@
 
 The cuDF GPU join probes a dynamic hash table with warp-cooperative linear
 probing. TPU adaptation (DESIGN.md §2): the table is a power-of-two
-key/value array resident in VMEM (fits: 64K slots x 8 B = 512 KiB); a block
-of probe keys advances all lanes together with a masked fori_loop — lanes
-that found their key (or an empty slot) stop contributing. Collision
-verification stays vectorized.
+key/value array resident in VMEM — the engine caps eligible builds at
+``operators.MAX_HASH_TABLE_SLOTS`` (2^18 slots x 8 B = 2 MiB, comfortably
+inside a ~16 MiB core alongside the probe blocks) and falls back to the
+sorted-key path beyond that. A block of probe keys advances all lanes
+together with a masked fori_loop — lanes that found their key (or an
+empty slot) stop contributing. Collision verification stays vectorized.
 """
 
 from __future__ import annotations
@@ -56,37 +58,53 @@ def _kernel(tk_ref, tv_ref, pk_ref, found_ref, val_ref, *,
     val_ref[...] = val
 
 
-def build_table(keys, vals, table_size: int, empty_key: int = -1):
-    """Host-side insert (linear probing), jnp: returns (tkeys, tvals)."""
+@functools.partial(jax.jit, static_argnames=("table_size", "empty_key"))
+def build_table(keys, vals, table_size: int, empty_key: int = -1, valid=None):
+    """Linear-probing insert of (key, val) pairs -> (tkeys, tvals).
+
+    Vectorized cooperative insertion (the GPU build idiom, no atomics):
+    every unplaced key attempts slot ``(hash(key) + round) & mask`` each
+    round; ties on a slot resolve by scatter-min on key index, winners are
+    placed, losers advance. Occupied slots never vacate, so the resulting
+    table satisfies the linear-probe invariant (a key at distance ``d``
+    from its home slot has no empty slot in between) regardless of the
+    placement order. Rows with ``valid`` False (or key == ``empty_key``,
+    which is indistinguishable from an empty slot) are never placed;
+    callers detect the latter by comparing occupied-slot and valid-row
+    counts. Pure jnp: runs the same on host, device, and under ``vmap``.
+    """
+    n = keys.shape[0]
     mask = table_size - 1
-
-    def insert(carry, kv):
-        tk, tv = carry
-        key, val = kv
-
-        def cond(state):
-            i, placed = state
-            return (~placed) & (i < table_size)
-
-        def body(state):
-            i, placed = state
-            return i + 1, placed
-
-        # scan probe positions; insert at first empty
-        def find(i, best):
-            idx = (_hash(key) + i) & mask
-            empty = tk[idx] == empty_key
-            return jnp.where((best < 0) & empty, idx, best)
-
-        pos = jax.lax.fori_loop(0, table_size,
-                                lambda i, b: find(i, b), jnp.int32(-1))
-        tk = tk.at[pos].set(key)
-        tv = tv.at[pos].set(val)
-        return (tk, tv), ()
-
+    if valid is None:
+        valid = jnp.ones((n,), dtype=bool)
     tk0 = jnp.full((table_size,), empty_key, jnp.int32)
     tv0 = jnp.zeros((table_size,), jnp.int32)
-    (tk, tv), _ = jax.lax.scan(insert, (tk0, tv0), (keys, vals))
+    if n == 0:
+        return tk0, tv0
+    keys = keys.astype(jnp.int32)
+    vals = vals.astype(jnp.int32)
+    home = _hash(keys) & mask
+    idxs = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(state):
+        _, _, placed, i = state
+        return jnp.any(~placed) & (i < table_size)
+
+    def body(state):
+        tk, tv, placed, i = state
+        slot = (home + i) & mask
+        want = (~placed) & (jnp.take(tk, slot) == empty_key)
+        cand = jnp.where(want, idxs, n)
+        winner = jnp.full((table_size,), n, jnp.int32).at[slot].min(
+            cand, mode="drop")
+        won = want & (jnp.take(winner, slot) == idxs)
+        dst = jnp.where(won, slot, table_size)      # losers scatter OOB
+        tk = tk.at[dst].set(keys, mode="drop")
+        tv = tv.at[dst].set(vals, mode="drop")
+        return tk, tv, placed | won, i + 1
+
+    tk, tv, _, _ = jax.lax.while_loop(
+        cond, body, (tk0, tv0, ~valid, jnp.int32(0)))
     return tk, tv
 
 
@@ -99,6 +117,8 @@ def hash_probe(table_keys, table_vals, probe_keys, empty_key: int = -1,
     n = probe_keys.shape[0]
     t = table_keys.shape[0]
     assert t & (t - 1) == 0, "table size must be a power of two"
+    if n == 0:
+        return (jnp.zeros((0,), jnp.bool_), jnp.zeros((0,), jnp.int32))
     probe_block = min(probe_block, n)
     pad = (-n) % probe_block
     if pad:

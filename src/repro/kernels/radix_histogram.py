@@ -37,6 +37,8 @@ def radix_histogram(pids, num_partitions: int, row_block: int = ROW_BLOCK,
                     interpret: bool = False):
     """pids [N] int32 in [0, P) (others ignored) -> counts [P] int32."""
     n = pids.shape[0]
+    if n == 0:
+        return jnp.zeros((num_partitions,), jnp.int32)
     row_block = min(row_block, n)
     pad = (-n) % row_block
     if pad:

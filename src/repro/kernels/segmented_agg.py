@@ -43,6 +43,8 @@ def segmented_sum(gids, values, num_groups: int, row_block: int = ROW_BLOCK,
                   interpret: bool = False):
     """gids [N] int32 (>= num_groups dropped), values [N] -> [num_groups]."""
     n = gids.shape[0]
+    if n == 0:
+        return jnp.zeros((num_groups,), jnp.float32)
     row_block = min(row_block, n)
     pad = (-n) % row_block
     if pad:

@@ -1,17 +1,21 @@
 """Pallas kernels vs ref.py oracles: shape/dtype sweeps + hypothesis
-property tests, all in interpret mode on CPU."""
+property tests, all in interpret mode on CPU. The ``seeded_given`` sweeps
+exercise the public ``kernels.ops`` wrappers (the layer the engine
+dispatches through) on the degenerate shapes the engine produces: empty
+batches, all-invalid batches, multi-slab group counts, and probe tables
+whose occupied runs exhaust ``max_probes``."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
+from _hypothesis_compat import given, ints, sampled, seeded_given, settings, st
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.block_prefix_sum import block_prefix_sum
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.hash_probe import build_table, hash_probe
 from repro.kernels.radix_histogram import radix_histogram
-from repro.kernels.segmented_agg import segmented_sum
+from repro.kernels.segmented_agg import GROUP_BLOCK, segmented_sum
 
 
 # ---------------------------------------------------------------------------
@@ -136,3 +140,128 @@ def test_prefix_sum_crosses_blocks():
     pos, total = block_prefix_sum(m, row_block=128, interpret=True)
     np.testing.assert_array_equal(np.asarray(pos), np.arange(1000))
     assert int(total) == 1000
+
+
+# ---------------------------------------------------------------------------
+# wrapper-vs-ref property sweeps (the kernels.ops dispatch surface)
+# ---------------------------------------------------------------------------
+
+def test_empty_inputs_all_wrappers():
+    """Zero-row batches are legal engine states; every wrapper must return
+    correctly shaped empties instead of dividing by a zero block count."""
+    e_i = jnp.zeros((0,), jnp.int32)
+    e_f = jnp.zeros((0,), jnp.float32)
+    e_b = jnp.zeros((0,), jnp.bool_)
+    out = ops.segmented_sum(e_i, e_f, 17)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(17))
+    np.testing.assert_array_equal(
+        np.asarray(ops.radix_histogram(e_i, 8)), np.zeros(8, np.int32))
+    pos, total = ops.block_prefix_sum(e_b)
+    assert pos.shape == (0,) and int(total) == 0
+    tk, tv = ops.build_table(e_i, e_i, 16)
+    assert int((np.asarray(tk) != -1).sum()) == 0
+    found, vals = ops.hash_probe(tk, tv, e_i)
+    assert found.shape == (0,) and vals.shape == (0,)
+
+
+@seeded_given(max_examples=10, n=ints(1, 400), num_groups=sampled(8, 40, 130))
+def test_all_invalid_rows_property(n, num_groups):
+    """All-dropped inputs (every gid/pid out of range, every mask bit off,
+    an empty probe table) aggregate to zero everywhere."""
+    rng = np.random.default_rng(n * 1000 + num_groups)
+    gids = jnp.asarray(
+        rng.integers(num_groups, num_groups + 50, n), jnp.int32)
+    vals = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    got = ops.segmented_sum(gids, vals, num_groups)
+    want = ref.segmented_agg(gids, vals, num_groups, "sum")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(num_groups))
+
+    hist = ops.radix_histogram(gids, num_groups)  # every pid out of range
+    np.testing.assert_array_equal(np.asarray(hist),
+                                  np.zeros(num_groups, np.int32))
+
+    mask = jnp.zeros((n,), jnp.bool_)
+    pos, total = ops.block_prefix_sum(mask)
+    want_pos, want_total = ref.block_prefix_sum(mask)
+    np.testing.assert_array_equal(np.asarray(pos), np.asarray(want_pos))
+    assert int(total) == int(want_total) == 0
+
+    # probe against a table with zero valid build rows: all miss
+    keys = jnp.asarray(rng.integers(0, 1000, 16), jnp.int32)
+    tk, tv = ops.build_table(keys, keys, 64,
+                             valid=jnp.zeros((16,), jnp.bool_))
+    found, _ = ops.hash_probe(tk, tv, keys)
+    assert not bool(found.any())
+
+
+@seeded_given(max_examples=8, n=ints(1, 4000),
+              num_groups=sampled(GROUP_BLOCK + 1, 2 * GROUP_BLOCK,
+                                 3 * GROUP_BLOCK + 7),
+              row_block=sampled(128, 1024))
+def test_multi_slab_groups_property(n, num_groups, row_block):
+    """num_groups > GROUP_BLOCK forces >1 accumulation slab; the kernel
+    must agree with the segment_sum oracle across the slab boundary."""
+    rng = np.random.default_rng(n)
+    gids = jnp.asarray(rng.integers(0, num_groups + 20, n), jnp.int32)
+    vals = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    got = ops.segmented_sum(gids, vals, num_groups, row_block=row_block)
+    want = ref.segmented_agg(gids, vals, num_groups, "sum")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@seeded_given(max_examples=8, n_keys=ints(4, 500),
+              table_pow=sampled(64, 256, 1024), max_probes=sampled(2, 4, 8))
+def test_max_probes_exhaustion_property(n_keys, table_pow, max_probes):
+    """An under-provisioned ``max_probes`` may miss keys parked deep in an
+    occupied run but must never fabricate a match; once ``max_probes``
+    covers the longest occupied run (+1 for the terminating empty slot)
+    the probe agrees with the oracle exactly. This is the contract
+    ``HashJoin`` relies on when it derives ``max_probes`` from the built
+    table's occupancy."""
+    n_keys = min(n_keys, table_pow // 2)     # load factor <= 1/2
+    rng = np.random.default_rng(n_keys * table_pow)
+    keys = jnp.asarray(rng.choice(100_000, n_keys, replace=False), jnp.int32)
+    vals = jnp.asarray(rng.integers(0, 1 << 30, n_keys), jnp.int32)
+    tk, tv = ops.build_table(keys, vals, table_pow)
+    probes = jnp.concatenate(
+        [keys, jnp.asarray(rng.integers(0, 100_000, 200), jnp.int32)])
+    want_f, want_v = ref.hash_probe(tk, tv, probes, empty_key=-1)
+
+    # exhaustion: found-set is a subset of the oracle's, values agree on it
+    got_f, got_v = ops.hash_probe(tk, tv, probes, max_probes=max_probes)
+    got_f, got_v = np.asarray(got_f), np.asarray(got_v)
+    assert not (got_f & ~np.asarray(want_f)).any()
+    np.testing.assert_array_equal(got_v[got_f], np.asarray(want_v)[got_f])
+
+    # sufficiency: the longest occupied run bounds the probe sequence
+    occ = np.asarray(tk) != -1
+    runs = np.diff(np.concatenate(
+        ([0], np.roll(occ, len(occ) - 1 - int(np.where(~occ)[0][-1]))
+         .astype(np.int8), [0])))
+    longest = int((np.where(runs == -1)[0] - np.where(runs == 1)[0]).max()) \
+        if occ.any() else 0
+    got_f, got_v = ops.hash_probe(tk, tv, probes, max_probes=longest + 1)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+    np.testing.assert_array_equal(np.asarray(got_v)[np.asarray(want_f)],
+                                  np.asarray(want_v)[np.asarray(want_f)])
+
+
+@seeded_given(max_examples=6, n_keys=ints(1, 300), dup=sampled(False, True))
+def test_build_table_probe_invariant_property(n_keys, dup):
+    """Any table the cooperative build produces must satisfy the linear
+    probe invariant: every inserted key is reachable from its home slot
+    through a gap-free occupied run (ref.hash_probe finds all of them)."""
+    rng = np.random.default_rng(n_keys)
+    table_size = 1024
+    keys_np = rng.choice(5000, n_keys, replace=dup)
+    keys = jnp.asarray(keys_np, jnp.int32)
+    vals = jnp.arange(n_keys, dtype=jnp.int32)
+    valid = jnp.asarray(rng.integers(0, 2, n_keys).astype(bool))
+    tk, tv = ops.build_table(keys, vals, table_size, valid=valid)
+    assert int((np.asarray(tk) != -1).sum()) == int(valid.sum())
+    found, _ = ref.hash_probe(tk, tv, keys, empty_key=-1)
+    # every valid key must be found (invalid-only keys may still be found
+    # when a duplicate of them was valid)
+    assert bool(np.asarray(found)[np.asarray(valid)].all())

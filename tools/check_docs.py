@@ -7,9 +7,10 @@ Two checks, both hard failures:
 1. Every relative link in the repo's markdown files must resolve to an
    existing file (anchors and external http(s)/mailto links are ignored).
 2. Every public module / class / function / method in the public API
-   surface (``src/repro/core`` and ``src/repro/storage``) must have a
-   docstring. Private names (leading underscore), dunders, and trivial
-   dataclass plumbing like ``children``/``__repr__`` overrides are exempt.
+   surface (``src/repro/core``, ``src/repro/storage`` and
+   ``src/repro/kernels``) must have a docstring. Private names (leading
+   underscore), dunders, and trivial dataclass plumbing like
+   ``children``/``__repr__`` overrides are exempt.
 
 Run locally before pushing; CI runs it in the ``docs`` job.
 """
@@ -27,7 +28,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 MD_SKIP = {"CHANGES.md", "ISSUE.md", "SNIPPETS.md", "PAPERS.md", "PAPER.md"}
 
 # public API surface for the docstring check
-API_DIRS = ("src/repro/core", "src/repro/storage")
+API_DIRS = ("src/repro/core", "src/repro/storage", "src/repro/kernels")
 
 # names whose absence of a docstring is noise, not information
 EXEMPT_NAMES = {"children", "main"}
