@@ -1,0 +1,129 @@
+"""Out-of-core TPC-H: slowdown vs device-memory budget.
+
+Theseus-style claim (PAPERS.md): a tiered memory hierarchy lets a query
+whose working set is several times device memory complete with *bounded*
+slowdown instead of failing admission. This suite shrinks the device
+budget to 1/2, 1/4, and 1/8 of each query's *observed* device-reservation
+peak (measured once under an unbounded spill manager, so the fractions
+bind at any scale factor) and runs
+a join/aggregation-heavy TPC-H subset through the spill subsystem
+(``core.spill``): grace-partitioned joins, flushing aggregations, staged
+exchanges. Every run is validated against the numpy oracle, and the
+reported curve includes the per-tier spilled bytes -- a row with zero
+spilled bytes at a fractional budget would mean the budget never bound.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import Session
+from repro.core.optimizer import estimate_memory
+from repro.tpch import dbgen, oracle, queries
+
+from .common import emit
+from .bench_concurrency import _assert_oracle
+
+# join-heavy (3, 18), high-cardinality agg (13), multi-join (5)
+QUERY_SET = (3, 5, 13, 18)
+# None = unbounded (in-memory baseline); k = device budget = peak // k
+BUDGET_DIVISORS = (None, 2, 4, 8)
+
+
+def _estimate(session: Session, plan) -> int:
+    return estimate_memory(session.optimize(plan), session.catalog,
+                           num_workers=session.num_workers,
+                           batch_rows=session.batch_rows,
+                           prefetch_depth=session.prefetch_depth)
+
+
+def _observed_peak(catalog, plan) -> int:
+    """Run once under an unbounded spill manager and report the true
+    high-water mark of operator device reservations -- the static
+    ``estimate_memory`` figure is deliberately conservative (prefetch
+    windows, capacity bounds), so fractions of it may never bind."""
+    session = Session(catalog, num_workers=1, batch_rows=8192,
+                      device_budget=1 << 40)
+    session.execute(plan)
+    spill = (session.executor_stats() or {}).get("spill", {})
+    return max(int(spill.get("reserved_peak", 0)), 1)
+
+
+def run(sf: float = 0.01) -> None:
+    catalog = dbgen.load_catalog(sf=sf)
+    data = dbgen.generate(sf=sf)
+    oracles = {q: oracle.ORACLES[q](data) for q in QUERY_SET}
+    plans = {q: queries.build_query(q, catalog) for q in QUERY_SET}
+    probe = Session(catalog, num_workers=1, batch_rows=8192)
+    estimates = {q: _estimate(probe, plans[q]) for q in QUERY_SET}
+    footprints = {q: _observed_peak(catalog, plans[q]) for q in QUERY_SET}
+
+    # warm jit caches: every (query, budget) pair compiles its own
+    # programs (grace partition shapes depend on the budget), so warm
+    # each divisor's exact budget once before timing
+    for q in QUERY_SET:
+        Session(catalog, num_workers=1, batch_rows=8192).execute(plans[q])
+        for divisor in BUDGET_DIVISORS:
+            if divisor is None:
+                continue
+            Session(catalog, num_workers=1, batch_rows=8192,
+                    device_budget=max(footprints[q] // divisor, 1024)
+                    ).execute(plans[q])
+
+    baseline_s: dict = {}
+    for divisor in BUDGET_DIVISORS:
+        total_s = 0.0
+        total_spilled = 0
+        total_disk = 0
+        per_query: dict = {}
+        for q in QUERY_SET:
+            budget = (None if divisor is None
+                      else max(footprints[q] // divisor, 1024))
+            session = Session(catalog, num_workers=1, batch_rows=8192,
+                              device_budget=budget)
+            t0 = time.perf_counter()
+            res = session.execute(plans[q])
+            dt = time.perf_counter() - t0
+            _assert_oracle(res, oracles[q], q)
+            spill = (session.executor_stats() or {}).get("spill", {})
+            spilled = spill.get("spilled_bytes", 0)
+            disk = spill.get("disk", {}).get("spilled_bytes", 0)
+            total_s += dt
+            total_spilled += spilled
+            total_disk += disk
+            per_query[f"q{q}"] = {
+                "seconds": dt, "device_budget": budget,
+                "observed_peak": footprints[q],
+                "estimated_footprint": estimates[q],
+                "spilled_bytes": spilled,
+                "disk_spilled_bytes": disk,
+                "slowdown": (dt / baseline_s[q] if divisor is not None
+                             else 1.0),
+            }
+            if divisor is None:
+                baseline_s[q] = dt
+        label = "inf" if divisor is None else f"1of{divisor}"
+        slowdown = (1.0 if divisor is None
+                    else total_s / sum(baseline_s.values()))
+        if divisor is not None and divisor >= 4:
+            assert total_spilled > 0, \
+                f"budget footprint/{divisor} never bound -- nothing spilled"
+        emit(f"outofcore_budget_{label}", total_s,
+             derived=f"{slowdown:.2f}x_slowdown",
+             detail={
+                 "sf": sf,
+                 "budget_divisor": divisor,
+                 "total_seconds": total_s,
+                 "slowdown_vs_unbounded": slowdown,
+                 "spilled_bytes": total_spilled,
+                 "disk_spilled_bytes": total_disk,
+                 "queries": per_query,
+             })
+        print(f"# budget={label:>5}: {total_s:.2f}s "
+              f"({slowdown:.2f}x vs in-memory) | spilled "
+              f"{total_spilled / 1e6:.1f} MB (disk {total_disk / 1e6:.1f} MB)",
+              flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -21,8 +21,9 @@ def main(argv=None) -> None:
 
     from . import (bench_barebones, bench_cold_hot, bench_concurrency,
                    bench_cost_perf, bench_exchange, bench_kernels,
-                   bench_q5_scaling, bench_scaleup, bench_scan_pipeline,
-                   bench_storage_format, bench_weak_scaling)
+                   bench_outofcore, bench_q5_scaling, bench_scaleup,
+                   bench_scan_pipeline, bench_storage_format,
+                   bench_weak_scaling)
 
     suites = [
         ("storage_format(§2.2)", bench_storage_format.run),
@@ -37,6 +38,7 @@ def main(argv=None) -> None:
         ("scaleup(Fig8)", bench_scaleup.run),
         ("cold_hot(Table3)", bench_cold_hot.run),
         ("cost_perf(Fig9)", bench_cost_perf.run),
+        ("outofcore(spill)", bench_outofcore.run),
     ]
     if args.only:
         suites = [(n, fn) for n, fn in suites if args.only in n]

@@ -31,6 +31,11 @@ from .exchange import ExchangeProtocol, ICIExchange
 from .streaming import ScanStats
 from .table import DeviceTable, concat_tables
 
+# smallest device reservation granted to a memory-hungry operator under
+# pressure: enough to make progress (one partition / a few groups resident)
+# without letting small operators monopolise the budget
+_MIN_GRANT = 1 << 10
+
 
 @dataclasses.dataclass
 class ExecutionContext:
@@ -57,12 +62,22 @@ class ExecutionContext:
     # thread's kernels.ops.current_backend() — an enclosing use_pallas()
     # scope, else the REPRO_KERNEL_BACKEND env default
     kernel_backend: Optional[str] = None
+    # tiered-memory spill manager (core.spill). None = in-memory-only
+    # execution (the pre-spill contract); set, the memory-hungry operators
+    # run spill-aware: joins whose build side exceeds its reservation go
+    # grace-partitioned, aggregations flush accumulator runs to the host
+    # tier, and oversized exchange send buffers stage through the store.
+    spill: Optional[object] = None
 
     def __post_init__(self):
         if self.exchange is None:
             self.exchange = ICIExchange(mesh=self.mesh)
         if self.kernel_backend is None:
             self.kernel_backend = kernel_ops.current_backend()
+
+    def host_budget(self):
+        """Shared host-memory budget (prefetch + spill host tier), if any."""
+        return self.spill.host if self.spill is not None else None
 
     def worker_sharding(self):
         """NamedSharding over the mesh's 'workers' axis (None off-mesh)."""
@@ -148,11 +163,14 @@ class Driver:
         # execution order ("#0 Repartition(l_orderkey)" -> counter deltas)
         self.exchange_stats: Dict[str, Dict[str, float]] = {}
         self._frag_seq = 0
+        # exchanges whose send buffer was staged through the spill store
+        self.spill_staged_exchanges = 0
+        self._spill_seq = 0
 
     def executor_stats(self) -> Dict[str, object]:
         """Per-query executor stats: scan counters, operator timings,
-        kernel backend + dispatch counts, and per-fragment exchange
-        counters (rows/bytes moved, host staging)."""
+        kernel backend + dispatch counts, per-fragment exchange counters
+        (rows/bytes moved, host staging), and per-tier spill counters."""
         return {
             "tables": {t: s.summary() for t, s in self.scan_stats.items()},
             "op_seconds": dict(self.op_seconds),
@@ -161,6 +179,9 @@ class Driver:
             "exchanges": {k: dict(v) for k, v in self.exchange_stats.items()},
             "kernel_backend": self.ctx.kernel_backend,
             "kernel_dispatch": dict(self.kernel_dispatch),
+            "spill": (self.ctx.spill.stats.summary()
+                      if self.ctx.spill is not None else {}),
+            "spill_staged_exchanges": self.spill_staged_exchanges,
         }
 
     def _kernel_scope(self):
@@ -174,17 +195,28 @@ class Driver:
     # -- public API ----------------------------------------------------------
     def execute(self, node: P.PlanNode) -> DeviceTable:
         """Run the plan; return the result as one device-resident table."""
-        with self._kernel_scope():
-            stream = self._stream(node)
-            return self._materialize(stream)
+        try:
+            with self._kernel_scope():
+                stream = self._stream(node)
+                return self._materialize(stream)
+        finally:
+            self._close_spill()
 
     def collect(self, node: P.PlanNode) -> Dict[str, np.ndarray]:
         """Run the plan; return valid rows as host numpy columns
         (deduplicated to worker 0 for replicated results)."""
-        with self._kernel_scope():
-            stream = self._stream(node)
-            table = self._materialize_table(stream.batches)
-        return self._collect_host(stream, table)
+        try:
+            with self._kernel_scope():
+                stream = self._stream(node)
+                table = self._materialize_table(stream.batches)
+            return self._collect_host(stream, table)
+        finally:
+            self._close_spill()
+
+    def _close_spill(self) -> None:
+        """Delete this query's spill files (counters survive in stats)."""
+        if self.ctx.spill is not None:
+            self.ctx.spill.close()
 
     def _collect_host(self, stream: "Stream",
                       table: DeviceTable) -> Dict[str, np.ndarray]:
@@ -252,16 +284,31 @@ class Driver:
     def _w(self) -> int:
         return self.ctx.num_workers
 
+    def _maybe_stage(self, table: DeviceTable) -> DeviceTable:
+        """Stage an oversized exchange send buffer through the spill store
+        (device -> host -> paged disk as the tiers fill) instead of pinning
+        it in device memory alongside the receive buffers."""
+        spill = self.ctx.spill
+        if spill is None or not spill.should_stage(table.nbytes()):
+            return table
+        key = ("exchange-stage", self._spill_seq)
+        self._spill_seq += 1
+        spill.spill_table(key, table)
+        self.spill_staged_exchanges += 1
+        return spill.restore(key)
+
     def _repartition(self, table: DeviceTable, keys: Sequence[str],
                      label: str = "repartition") -> DeviceTable:
         return self._tracked(
             f"{label}({','.join(keys)})",
-            lambda: self.ctx.exchange.repartition(table, tuple(keys), self._w))
+            lambda: self.ctx.exchange.repartition(
+                self._maybe_stage(table), tuple(keys), self._w))
 
     def _broadcast(self, table: DeviceTable,
                    label: str = "broadcast") -> DeviceTable:
         return self._tracked(
-            label, lambda: self.ctx.exchange.broadcast(table, self._w))
+            label, lambda: self.ctx.exchange.broadcast(
+                self._maybe_stage(table), self._w))
 
     def _tracked(self, label: str, fn):
         """Run one exchange, recording its stats delta as a fragment entry
@@ -300,11 +347,15 @@ class Driver:
         src = self.ctx.catalog.get(node.table)
         stats = self.scan_stats.setdefault(node.table, ScanStats())
         if self.ctx.streaming and hasattr(src, "stream"):
+            kwargs = {}
+            if "host_budget" in inspect.signature(src.stream).parameters:
+                # prefetch participates in the spill manager's host budget
+                kwargs["host_budget"] = self.ctx.host_budget()
             morsels = src.stream(self._w, node.columns, self.ctx.batch_rows,
                                  filter_expr=node.filter,
                                  prefetch_depth=self.ctx.prefetch_depth,
                                  sharding=self.ctx.worker_sharding(),
-                                 stats=stats)
+                                 stats=stats, **kwargs)
             scan = StreamingScan(node.table, morsels, stats, self.op_seconds)
             if node.filter is not None:
                 fp = ops.FilterProject(node.filter)
@@ -346,6 +397,39 @@ class Driver:
             return child
         return Stream(self._run_pipeline(fp, child.batches), child.dist)
 
+    def _release_after(self, batches: Iterator[DeviceTable],
+                       op_key: str) -> Iterator[DeviceTable]:
+        """Yield through ``batches``; return the operator's device
+        reservation to the spill manager when the stream is drained."""
+        try:
+            yield from batches
+        finally:
+            self.ctx.spill.release(op_key)
+
+    def _agg_spill(self, node: P.Aggregation) -> dict:
+        """Spill kwargs for one HashAggregation: reserve the accumulator's
+        footprint; a shortfall runs the operator in flush-to-host mode with
+        the flush point scaled to the granted fraction."""
+        spill = self.ctx.spill
+        if spill is None:
+            return {}
+        from .optimizer import infer_schema, row_width
+        try:
+            width = row_width(infer_schema(node, self.ctx.catalog))
+        except (TypeError, KeyError):
+            width = 64
+        # accumulator + the concat-merge scratch copy, per worker
+        want = 2 * width * node.max_groups * self._w
+        op_key = f"agg{self._spill_seq}"
+        self._spill_seq += 1
+        granted = spill.reserve(op_key, want, minimum=min(want, _MIN_GRANT))
+        if granted >= want:
+            spill.release(op_key)
+            return {}
+        flush = max(1, (node.max_groups * granted) // max(want, 1))
+        return {"spill": spill, "spill_flush_groups": flush,
+                "op_key": op_key}
+
     def _exec_aggregation(self, node: P.Aggregation) -> Stream:
         child = self._stream(node.child)
         mode = node.mode
@@ -353,16 +437,20 @@ class Driver:
             mode = "single" if (self._w == 1 or child.dist == "replicated") \
                 else "two_phase"
 
+        def pipeline(agg_mode, batches):
+            sk = self._agg_spill(node)
+            op_key = sk.pop("op_key", None)
+            agg = ops.HashAggregation(node.group_keys, node.aggs, agg_mode,
+                                      node.max_groups, **sk)
+            out = self._run_pipeline(agg, batches)
+            return self._release_after(out, op_key) if op_key else out
+
         if mode in ("single", "partial", "final"):
-            agg = ops.HashAggregation(node.group_keys, node.aggs, mode,
-                                      node.max_groups)
-            return Stream(self._run_pipeline(agg, child.batches), child.dist)
+            return Stream(pipeline(mode, child.batches), child.dist)
 
         # two-phase: partial -> exchange on keys -> final  (Velox's
         # Partial/Final modes with a Presto exchange between the stages)
-        partial = ops.HashAggregation(node.group_keys, node.aggs, "partial",
-                                      node.max_groups)
-        partial_out = list(self._run_pipeline(partial, child.batches))
+        partial_out = list(pipeline("partial", child.batches))
         table = self._materialize_table(iter(partial_out))
         if node.group_keys:
             exchanged = self._repartition(table, node.group_keys, "agg")
@@ -371,9 +459,7 @@ class Driver:
             # global agg: replicate partials
             exchanged = self._broadcast(table, "agg-broadcast")
             dist = "replicated"
-        final = ops.HashAggregation(node.group_keys, node.aggs, "final",
-                                    node.max_groups)
-        return Stream(self._run_pipeline(final, self._rebatch(exchanged)), dist)
+        return Stream(pipeline("final", self._rebatch(exchanged)), dist)
 
     def _exec_distinct(self, node: P.Distinct) -> Stream:
         child = self._stream(node.child)
@@ -413,13 +499,38 @@ class Driver:
                 dist = "partitioned"
             # 'local': co-partitioned already, no movement
 
+        spill = self.ctx.spill
+        op_key = None
+        if spill is not None:
+            # reserve the build side + hash state + probe headroom; a
+            # shortfall routes the join through the grace-partitioned path
+            want = 2 * build.nbytes()
+            op_key = f"join{self._spill_seq}"
+            self._spill_seq += 1
+            granted = spill.reserve(op_key, want, minimum=min(want, _MIN_GRANT))
+            if granted < want:
+                join = ops.GraceHashJoin(
+                    node.build_keys, node.probe_keys, node.build_payload,
+                    node.join_type, node.max_matches,
+                    build_rows=node.build_rows, spill=spill,
+                    reservation=granted)
+                join.open()
+                join.add_build(build)
+                join.seal_build()
+                del build   # partitioned into the spill hierarchy
+                out = self._run_pipeline(join, probe_batches)
+                return Stream(self._release_after(out, op_key), dist)
+
         join = ops.HashJoin(node.build_keys, node.probe_keys,
                             node.build_payload, node.join_type,
                             node.max_matches, build_rows=node.build_rows)
         join.open()
         join.add_build(build)
         join.seal_build()
-        return Stream(self._run_pipeline(join, probe_batches), dist)
+        out = self._run_pipeline(join, probe_batches)
+        if op_key is not None:
+            out = self._release_after(out, op_key)
+        return Stream(out, dist)
 
     def _exec_orderby(self, node: P.OrderBy) -> Stream:
         from .exchange import maybe_compact

@@ -24,6 +24,7 @@ one vmap lane per mesh worker here).
 from __future__ import annotations
 
 import functools
+import itertools
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -293,9 +294,12 @@ class HashAggregation(Operator):
 
     name = "HashAggregation"
 
+    _spill_seq = itertools.count()
+
     def __init__(self, group_keys: Sequence[str], aggs: Sequence[AggSpec],
                  mode: str = "single", max_groups: int = 4096,
-                 emit_rows: Optional[int] = None):
+                 emit_rows: Optional[int] = None, spill=None,
+                 spill_flush_groups: Optional[int] = None):
         assert mode in ("partial", "final", "single")
         self.group_keys = tuple(group_keys)
         self.user_specs = tuple(aggs)
@@ -304,11 +308,20 @@ class HashAggregation(Operator):
         self.specs = merge_specs(lowered) if mode == "final" else lowered
         self.max_groups = max_groups
         self.emit_rows = emit_rows
+        # spill-aware mode (core.spill): with a SpillManager and a flush
+        # threshold, the accumulator is flushed to the host tier whenever
+        # its occupied groups reach the threshold (max_groups pressure);
+        # finish() merges the flushed runs back in a final pass
+        self.spill = spill
+        self.spill_flush_groups = spill_flush_groups
+        self._skey = f"agg{next(self._spill_seq)}"
+        self._flushed: List[object] = []
         self._acc: Optional[DeviceTable] = None
         self._saw_input = False
 
     def open(self):
         self._acc = None
+        self._flushed = []
         self._saw_input = False
 
     def add_input(self, batch):
@@ -320,6 +333,13 @@ class HashAggregation(Operator):
             merged = concat_tables([self._acc, part])
             self._acc = _aggregate(merged, self.group_keys, merge_specs(self.specs),
                                    self.max_groups)
+        if (self.spill is not None and self.spill_flush_groups is not None
+                and int(self._acc.num_valid()) >= self.spill_flush_groups):
+            key = (self._skey, len(self._flushed))
+            self.spill.spill_table(key, self._acc)
+            self._flushed.append(key)
+            self._acc = None
+            return []
         if (self.emit_rows is not None and self.mode == "partial"
                 and int(self._acc.num_valid()) >= self.emit_rows):
             out, self._acc = self._acc, None
@@ -327,6 +347,20 @@ class HashAggregation(Operator):
         return []
 
     def finish(self):
+        if self._flushed:
+            # final pass: restore the flushed runs one at a time and merge
+            # each into the accumulator (device working set stays at two
+            # max_groups tables regardless of how many runs spilled)
+            acc = self._acc
+            for key in self._flushed:
+                run = self.spill.restore(key)
+                if acc is None:
+                    acc = run
+                else:
+                    acc = _aggregate(concat_tables([acc, run]),
+                                     self.group_keys,
+                                     merge_specs(self.specs), self.max_groups)
+            self._acc, self._flushed = acc, []
         if self._acc is None:
             return []
         out, self._acc = self._acc, None
@@ -597,6 +631,221 @@ class HashJoin(Operator):
                 and self.max_matches > 1):
             out = compact_table(out)
         return [out]
+
+
+# ---------------------------------------------------------------------------
+# GraceHashJoin (spill-aware out-of-core join over core.spill)
+# ---------------------------------------------------------------------------
+
+def _pow2(n: int) -> int:
+    return 1 << max(int(np.ceil(np.log2(max(int(n), 1)))), 0)
+
+
+@table_op()
+def _grace_pids(table: DeviceTable, keys, num_parts: int):
+    """Radix-partition ids for grace-join fan-out — the exchange's
+    partitioner (``rel.partition_ids``) with its metadata histogram
+    (``radix_histogram`` under the pallas backend, one-hot sum as the jnp
+    oracle)."""
+    pids = rel.partition_ids([table.columns[k] for k in keys],
+                             table.validity, num_parts)
+    if kernel_ops.current_backend() == "pallas":
+        masked = jnp.where(table.validity, pids,
+                           jnp.asarray(num_parts, jnp.int32))
+        counts = kernel_ops.radix_histogram(masked, num_parts)
+    else:
+        onehot = jax.nn.one_hot(pids, num_parts, dtype=jnp.int32)
+        counts = jnp.sum(onehot * table.validity[..., None].astype(jnp.int32),
+                         axis=-2)
+    return pids, counts
+
+
+def _split_host_partitions(table: DeviceTable, pids, num_parts: int):
+    """Pull a (possibly worker-stacked) table to host and slice it into
+    ``num_parts`` compacted partitions. Returns ``(columns, validity,
+    valid_rows)`` per partition; capacities round up to powers of two so
+    similarly sized partitions share compiled probe programs."""
+    cols = {n: np.asarray(a) for n, a in table.columns.items()}
+    valid = np.asarray(table.validity)
+    pid = np.asarray(pids)
+    stacked = valid.ndim == 2
+    if not stacked:
+        valid, pid = valid[None], pid[None]
+        cols = {n: a[None] for n, a in cols.items()}
+    w = valid.shape[0]
+    parts = []
+    for p in range(num_parts):
+        sel = [np.nonzero(valid[i] & (pid[i] == p))[0] for i in range(w)]
+        cap = _pow2(max(max((len(s) for s in sel), default=0), 1))
+        validity = np.zeros((w, cap), dtype=bool)
+        out = {}
+        for n, a in cols.items():
+            buf = np.zeros((w, cap) + a.shape[2:], dtype=a.dtype)
+            for i, s in enumerate(sel):
+                buf[i, : len(s)] = a[i][s]
+            out[n] = buf
+        for i, s in enumerate(sel):
+            validity[i, : len(s)] = True
+        if not stacked:
+            out = {n: b[0] for n, b in out.items()}
+            validity = validity[0]
+        parts.append((out, validity, int(sum(len(s) for s in sel))))
+    return parts
+
+
+def _one_row_invalid(table: DeviceTable) -> DeviceTable:
+    """A capacity-1, zero-valid-rows table with ``table``'s schema and
+    layout (worker-stacked or local)."""
+    cols = {n: a[..., :1, :] if table.schema[n].name == "bytes"
+            else a[..., :1] for n, a in table.columns.items()}
+    return DeviceTable({n: jnp.asarray(a) for n, a in cols.items()},
+                       jnp.zeros_like(table.validity[..., :1]),
+                       dict(table.schema))
+
+
+class GraceHashJoin(Operator):
+    """Grace-style partitioned hash join over the spill hierarchy.
+
+    Used by the driver when a join's build side does not fit its device
+    reservation (``core.spill.SpillManager``). Both sides are
+    radix-partitioned on the join-key hash — the same partitioner the
+    exchange uses for its metadata phase — so matching rows always land in
+    the same partition and each pair joins independently:
+
+    * ``seal_build`` partitions the materialized build side; partitions
+      stay device-resident until the reservation is half used, the rest
+      spill (host buffers, then paged disk pages as the host tier fills).
+    * ``add_input`` partitions each probe batch and stages every slice in
+      the spill store (fully blocking — like the classic grace join's
+      pass 1).
+    * ``finish`` processes partition pairs one at a time: restore one
+      build partition, build its hash table (inheriting ``HashJoin``'s
+      backend dispatch, so the pallas open-addressing path still applies
+      per partition), replay its staged probe slices, emit the outputs.
+
+    Inner/semi/anti/outer joins all stay correct per partition because a
+    probe row's matches can only live in its own hash partition.
+    """
+
+    name = "GraceHashJoin"
+    _seq = itertools.count()
+
+    def __init__(self, build_keys: Sequence[str], probe_keys: Sequence[str],
+                 build_payload: Sequence[str] = (), join_type: str = "inner",
+                 max_matches: int = 1, compact: bool = True,
+                 build_rows: Optional[int] = None, *, spill,
+                 reservation: int, num_partitions: Optional[int] = None):
+        self.build_keys = tuple(build_keys)
+        self.probe_keys = tuple(probe_keys)
+        self.build_payload = tuple(build_payload)
+        self.join_type = join_type
+        self.max_matches = max_matches
+        self.compact = compact
+        self.build_rows = build_rows
+        self.spill = spill
+        self.reservation = max(int(reservation), 1)
+        self.num_partitions = num_partitions
+        self._skey = f"grace{next(self._seq)}"
+        self._build_batches: List[DeviceTable] = []
+        self._resident: dict = {}        # partition -> DeviceTable (device tier)
+        self._spilled_build: set = set()
+        self._build_rows_by_part: dict = {}
+        self._probe_chunks: dict = {}    # partition -> staged chunk count
+        self._build_schema: Optional[dict] = None
+        # one-row all-invalid prototypes: when every staged slice is empty
+        # (or nothing matches), finish() still emits one correctly-shaped
+        # output batch so downstream operators see the join's schema
+        self._build_proto: Optional[DeviceTable] = None
+        self._probe_proto: Optional[DeviceTable] = None
+
+    def add_build(self, batch: DeviceTable):
+        """Accumulate one build-side batch (device-resident until seal)."""
+        self._build_batches.append(batch)
+
+    def seal_build(self):
+        """Radix-partition the build side; spill partitions past the
+        reservation. Probing may start after."""
+        assert self._build_batches, "join build side is empty"
+        build = concat_tables(self._build_batches)
+        self._build_batches = []
+        self._build_schema = dict(build.schema)
+        self._build_proto = _one_row_invalid(build)
+        if self.num_partitions is None:
+            # fan out until one partition (+ its probe slice and hash
+            # state) fits about half the reservation
+            want = -(-2 * build.nbytes() // self.reservation)
+            self.num_partitions = max(min(_pow2(want), 64), 2)
+        pids, _ = _grace_pids(build, self.build_keys, self.num_partitions)
+        parts = _split_host_partitions(build, pids, self.num_partitions)
+        resident_budget = self.reservation // 2
+        used = 0
+        for p, (cols, validity, rows) in enumerate(parts):
+            self._build_rows_by_part[p] = rows
+            nbytes = validity.nbytes + sum(a.nbytes for a in cols.values())
+            if used + nbytes <= resident_budget:
+                used += nbytes
+                self._resident[p] = DeviceTable(
+                    {n: jnp.asarray(a) for n, a in cols.items()},
+                    jnp.asarray(validity), dict(self._build_schema))
+            else:
+                self.spill.put_host((self._skey, "build", p), cols, validity,
+                                    self._build_schema)
+                self._spilled_build.add(p)
+
+    def add_input(self, batch):
+        assert self._build_schema is not None, "probe before build sealed"
+        if self._probe_proto is None:
+            self._probe_proto = _one_row_invalid(batch)
+        pids, _ = _grace_pids(batch, self.probe_keys, self.num_partitions)
+        for p, (cols, validity, rows) in enumerate(
+                _split_host_partitions(batch, pids, self.num_partitions)):
+            if rows == 0:
+                continue
+            i = self._probe_chunks.get(p, 0)
+            self.spill.put_host((self._skey, "probe", p, i), cols, validity,
+                                dict(batch.schema))
+            self._probe_chunks[p] = i + 1
+        return []
+
+    def finish(self):
+        outs: List[DeviceTable] = []
+        for p in range(self.num_partitions):
+            chunks = self._probe_chunks.pop(p, 0)
+            if chunks == 0:
+                # no probe rows hashed here: nothing can match; discard
+                self._resident.pop(p, None)
+                if p in self._spilled_build:
+                    self.spill.drop((self._skey, "build", p))
+                continue
+            if p in self._resident:
+                build = self._resident.pop(p)
+            else:
+                build = self.spill.restore((self._skey, "build", p))
+            inner = HashJoin(self.build_keys, self.probe_keys,
+                             self.build_payload, self.join_type,
+                             self.max_matches, compact=self.compact,
+                             build_rows=max(self._build_rows_by_part[p], 1))
+            inner.open()
+            inner.add_build(build)
+            inner.seal_build()
+            for i in range(chunks):
+                chunk = self.spill.restore((self._skey, "probe", p, i))
+                outs.extend(inner.add_input(chunk))
+            outs.extend(inner.finish())
+        if not outs and self._probe_proto is not None:
+            # every probe slice was empty (e.g. a selective build filter
+            # upstream): emit one all-invalid batch with the join's output
+            # schema so the stream stays alive for downstream operators
+            inner = HashJoin(self.build_keys, self.probe_keys,
+                             self.build_payload, self.join_type,
+                             self.max_matches, compact=self.compact,
+                             build_rows=1)
+            inner.open()
+            inner.add_build(self._build_proto)
+            inner.seal_build()
+            outs.extend(inner.add_input(self._probe_proto))
+            outs.extend(inner.finish())
+        return outs
 
 
 @table_op()

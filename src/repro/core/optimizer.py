@@ -620,6 +620,56 @@ def row_width(schema: Dict[str, dt.DType]) -> int:
     return width
 
 
+@dataclasses.dataclass(frozen=True)
+class MemoryEstimate:
+    """Per-operator device-memory footprint breakdown for one plan.
+
+    ``per_node`` lists ``(label, bytes)`` in plan-walk order; ``total`` is
+    their sum (identical to ``estimate_memory``'s return value). The
+    breakdown travels with admission decisions so a ``QueryRejected`` or an
+    admit-with-spill slowdown is explainable from the message alone.
+    """
+
+    total: int
+    per_node: tuple    # ((label, bytes), ...)
+
+    def spill_cost(self, device_budget: int,
+                   host_budget: int = 1 << 31) -> Dict[str, object]:
+        """Bytes expected to cross each memory tier when this plan runs
+        under ``device_budget``, plus a coarse slowdown multiplier.
+
+        The excess over the device budget lands in pinned host buffers
+        first and overflows to paged disk files past ``host_budget``.
+        The slowdown model prices each spilled byte at the extra
+        transfers it implies (device<->host ~2x the in-memory touch,
+        disk ~8x) -- deliberately pessimistic, like the footprint model.
+        """
+        excess = max(0, self.total - max(device_budget, 1))
+        host_bytes = min(excess, max(host_budget, 0))
+        disk_bytes = excess - host_bytes
+        denom = max(self.total, 1)
+        slowdown = 1.0 + 2.0 * host_bytes / denom + 8.0 * disk_bytes / denom
+        return {"excess_bytes": excess, "host_tier_bytes": host_bytes,
+                "disk_tier_bytes": disk_bytes,
+                "est_slowdown": round(slowdown, 2)}
+
+    def describe(self, device_budget: Optional[int] = None,
+                 host_budget: int = 1 << 31) -> str:
+        """Human-readable footprint breakdown (one line per operator),
+        optionally followed by the spill-cost estimate for a budget."""
+        lines = [f"estimated footprint: {self.total} B"]
+        for label, nbytes in self.per_node:
+            lines.append(f"  {label}: {nbytes} B")
+        if device_budget is not None:
+            cost = self.spill_cost(device_budget, host_budget)
+            lines.append(
+                f"  spill cost @ budget {device_budget} B: "
+                f"{cost['host_tier_bytes']} B host tier, "
+                f"{cost['disk_tier_bytes']} B disk tier, "
+                f"~{cost['est_slowdown']}x est. slowdown")
+        return "\n".join(lines)
+
+
 def estimate_memory(plan: P.PlanNode, catalog, num_workers: int = 1,
                     batch_rows: int = 8192, prefetch_depth: int = 2) -> int:
     """Estimated peak device-memory footprint of executing ``plan``, in bytes.
@@ -645,7 +695,16 @@ def estimate_memory(plan: P.PlanNode, catalog, num_workers: int = 1,
     never prices real work at zero, so admission errs toward queueing
     rather than oversubscribing device memory.
     """
-    total = 0
+    return estimate_memory_breakdown(plan, catalog, num_workers, batch_rows,
+                                     prefetch_depth).total
+
+
+def estimate_memory_breakdown(plan: P.PlanNode, catalog,
+                              num_workers: int = 1, batch_rows: int = 8192,
+                              prefetch_depth: int = 2) -> MemoryEstimate:
+    """``estimate_memory`` with the per-operator breakdown retained
+    (admission control attaches it to rejections and spill decisions)."""
+    parts: List = []
     w = max(num_workers, 1)
 
     def bounded_rows(node: P.PlanNode) -> int:
@@ -655,47 +714,60 @@ def estimate_memory(plan: P.PlanNode, catalog, num_workers: int = 1,
             return 1 << 20
 
     def visit(node: P.PlanNode) -> None:
-        nonlocal total
         if isinstance(node, P.TableScan):
             width = row_width(infer_schema(node, catalog))
             in_flight = batch_rows * w * (prefetch_depth + 1)
             total_rows = bounded_rows(node)
-            total += width * min(in_flight, max(total_rows, batch_rows))
+            parts.append((f"TableScan({node.table})",
+                          width * min(in_flight,
+                                      max(total_rows, batch_rows))))
         elif isinstance(node, P.InMemorySource):
             width = row_width(infer_schema(node, catalog))
-            total += width * bounded_rows(node)
+            parts.append(("InMemorySource", width * bounded_rows(node)))
         elif isinstance(node, (P.Aggregation, P.Distinct)):
             width = row_width(infer_schema(node, catalog))
             phases = 2 if (isinstance(node, P.Aggregation)
                            and node.mode in ("auto", "two_phase")
                            and w > 1) else 1
-            total += width * node.max_groups * w * phases
+            key_cols = (node.group_keys if isinstance(node, P.Aggregation)
+                        else node.keys)
+            keys = ",".join(key_cols) if key_cols else "<global>"
+            parts.append((f"{type(node).__name__}({keys})",
+                          width * node.max_groups * w * phases))
         elif isinstance(node, P.Join):
             build_width = row_width(infer_schema(node.build, catalog))
             build_rows = bounded_rows(node.build)
             repl = w if node.distribution == "broadcast" else 1
-            total += build_width * build_rows * repl
             out_width = row_width(infer_schema(node, catalog))
-            total += out_width * batch_rows * max(node.max_matches, 1) * w
+            keys = ",".join(node.build_keys)
+            parts.append((f"Join({keys}) build", build_width * build_rows
+                          * repl))
+            parts.append((f"Join({keys}) probe-out",
+                          out_width * batch_rows
+                          * max(node.max_matches, 1) * w))
         elif isinstance(node, (P.OrderBy, P.Limit, P.Exchange)):
             width = row_width(infer_schema(node.children()[0], catalog))
-            total += width * bounded_rows(node.children()[0])
+            parts.append((type(node).__name__,
+                          width * bounded_rows(node.children()[0])))
         elif isinstance(node, P.Repartition):
             # blocking: child materialized into [W, W, cap] send layout,
             # then received into same-sized worker-stacked buffers
             width = row_width(infer_schema(node.child, catalog))
-            total += 2 * width * bounded_rows(node.child)
+            parts.append(("Repartition",
+                          2 * width * bounded_rows(node.child)))
         elif isinstance(node, P.Broadcast):
             # W-stacked replicas: every worker pins a copy of all rows,
             # plus the materialized input being replicated
             width = row_width(infer_schema(node.child, catalog))
             repl = max(node.num_workers, w)
-            total += width * bounded_rows(node.child) * (repl + 1)
+            parts.append(("Broadcast",
+                          width * bounded_rows(node.child) * (repl + 1)))
         for c in node.children():
             visit(c)
 
     visit(plan)
-    return total
+    return MemoryEstimate(total=sum(n for _, n in parts),
+                          per_node=tuple(parts))
 
 
 # ---------------------------------------------------------------------------

@@ -6,13 +6,20 @@ device-memory budget. This module is that layer for the repro engine — it
 turns the one-query-at-a-time ``Session`` into a serving engine:
 
 * **Admission control** — every query's peak device-memory footprint is
-  estimated from its optimized plan (``optimizer.estimate_memory``: scan
-  prefetch windows, ``max_groups``/``max_matches`` capacities, join build
-  sides). Queries are admitted only while the sum of in-flight estimates
-  fits ``SchedulerConfig.memory_budget``; the rest wait in a bounded
-  priority queue. A query that could never fit (estimate > total budget) or
-  arrives when the queue is full is rejected immediately (``QueryRejected``)
-  so callers get backpressure instead of unbounded latency.
+  estimated from its optimized plan (``optimizer.estimate_memory_breakdown``:
+  scan prefetch windows, ``max_groups``/``max_matches`` capacities, join
+  build sides). Queries are admitted only while the sum of in-flight
+  estimates fits ``SchedulerConfig.memory_budget``; the rest wait in a
+  bounded priority queue. A query whose footprint exceeds the whole budget
+  is **admitted with spilling** instead of rejected: it runs under a
+  per-query ``core.spill.SpillManager`` (the tiered-memory hierarchy:
+  device reservations -> pinned host buffers -> paged disk files) and pays
+  a priced slowdown (``QueryHandle.spill_plan``). Only a footprint past
+  ``SchedulerConfig.spill_disk_ceiling`` — beyond what even the disk tier
+  absorbs — or a full wait queue is rejected (``QueryRejected``), so
+  callers get backpressure instead of unbounded latency; the rejection
+  message carries the per-operator footprint breakdown and spill-cost
+  estimate so it is explainable from the exception alone.
 
 * **Interleaved execution** — admitted queries run on a pool of
   ``max_concurrency`` worker threads, each driving its own ``Driver``.
@@ -53,11 +60,13 @@ from typing import Dict, List, Optional, Tuple
 from ..kernels import ops as kernel_ops
 from . import plan as P
 from .driver import Driver
-from .optimizer import estimate_memory, optimize
+from .optimizer import estimate_memory_breakdown, optimize
 
 
 class QueryRejected(RuntimeError):
-    """Admission control refused the query (over budget or queue full)."""
+    """Admission control refused the query (footprint beyond even the
+    spill disk ceiling, or queue full). The message carries the
+    per-operator footprint breakdown and spill-cost estimate."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +92,12 @@ class SchedulerConfig:
     # anti-starvation: after the queue head has been passed over this many
     # times for smaller queries, backfilling stops until the head fits
     max_head_skips: int = 16
+    # tiered-memory spill for over-budget queries (core.spill): host-tier
+    # cap, the only hard limit (footprint past the disk ceiling rejects),
+    # and where the paged spill files go (None = per-query temp dirs)
+    spill_host_budget: int = 1 << 31
+    spill_disk_ceiling: int = 1 << 38
+    spill_dir: Optional[str] = None
 
 
 class QueryHandle:
@@ -100,7 +115,14 @@ class QueryHandle:
         self.query_id = query_id
         self.plan = plan
         self.priority = priority
-        self.estimate = estimate
+        self.estimate = estimate       # bytes charged against the budget
+        self.footprint = estimate      # un-capped estimated peak footprint
+        # optimizer.MemoryEstimate per-operator breakdown (None for
+        # result-cache hits, which never reach estimation)
+        self.memory_breakdown = None
+        # admit-with-spill pricing (spill_cost dict) when the footprint
+        # exceeded the memory budget; None for in-budget queries
+        self.spill_plan: Optional[Dict] = None
         self.cache_hit = False
         self.plan_cache_hit = False
         # kernel backend pinned at submit time (None until admitted)
@@ -246,6 +268,7 @@ class QueryScheduler:
         self.failed = 0
         self.rejected = 0
         self.coalesced = 0
+        self.spill_admitted = 0
 
     # -- public API ---------------------------------------------------------
     def submit(self, plan: P.PlanNode, priority: int = 0) -> QueryHandle:
@@ -281,12 +304,19 @@ class QueryScheduler:
             return handle
 
         optimized, plan_hit = self._optimized(plan, key)
-        est = estimate_memory(
+        breakdown = estimate_memory_breakdown(
             optimized, self.session.catalog,
             num_workers=self.session.num_workers,
             batch_rows=self.session.batch_rows,
             prefetch_depth=self.session.prefetch_depth)
-        handle = QueryHandle(next(self._ids), optimized, priority, est)
+        est = breakdown.total
+        # over-budget queries are admitted with spilling: they charge the
+        # whole budget (running effectively alone) and degrade through the
+        # host/disk tiers instead of being refused
+        handle = QueryHandle(next(self._ids), optimized, priority,
+                             min(est, self.config.memory_budget))
+        handle.footprint = est
+        handle.memory_breakdown = breakdown
         handle.plan_cache_hit = plan_hit
         handle.kernel_backend = backend
         # version snapshot taken NOW: if a table is re-registered while the
@@ -295,13 +325,22 @@ class QueryScheduler:
         handle._versions = self.session.catalog.versions(
             referenced_tables(optimized))
 
-        if est > self.config.memory_budget:
+        if est > self.config.spill_disk_ceiling:
             with self._cond:
                 self.rejected += 1
             raise QueryRejected(
                 f"query footprint ~{est} B exceeds the scheduler's "
-                f"memory budget of {self.config.memory_budget} B; "
-                f"raise SchedulerConfig.memory_budget or shrink the query")
+                f"memory budget of {self.config.memory_budget} B and the "
+                f"spill disk ceiling of {self.config.spill_disk_ceiling} B; "
+                f"raise SchedulerConfig.spill_disk_ceiling or shrink the "
+                "query\n"
+                + breakdown.describe(self.config.memory_budget,
+                                     self.config.spill_host_budget))
+        if est > self.config.memory_budget:
+            handle.spill_plan = breakdown.spill_cost(
+                self.config.memory_budget, self.config.spill_host_budget)
+            with self._cond:
+                self.spill_admitted += 1
         with self._cond:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
@@ -362,6 +401,7 @@ class QueryScheduler:
                 "failed": self.failed,
                 "rejected": self.rejected,
                 "coalesced": self.coalesced,
+                "spill_admitted": self.spill_admitted,
                 "queued": len(self._pending),
                 "running": self._running,
                 "mem_in_use": self._mem_in_use,
@@ -472,6 +512,16 @@ class QueryScheduler:
                 # concurrent queries: each Driver gets a fresh clone
                 ctx = dataclasses.replace(
                     ctx, exchange=self.session.exchange.clone())
+            if handle.spill_plan is not None and ctx.spill is None:
+                # admitted over budget: run under a per-query spill
+                # manager whose device budget is the scheduler's whole
+                # budget (the query charged all of it, so it runs alone)
+                from .spill import SpillManager
+                ctx = dataclasses.replace(ctx, spill=SpillManager(
+                    self.config.memory_budget,
+                    self.config.spill_host_budget,
+                    spill_dir=self.config.spill_dir,
+                    disk_ceiling=self.config.spill_disk_ceiling))
             driver = Driver(ctx)
             result = driver.collect(handle.plan)
             handle.executor_stats = driver.executor_stats()

@@ -68,7 +68,8 @@ class TableSource:
 
     def stream(self, num_workers: int, columns, batch_rows: int,
                filter_expr=None, prefetch_depth: int = 2, sharding=None,
-               stats: Optional[ScanStats] = None) -> MorselPrefetcher:
+               stats: Optional[ScanStats] = None,
+               host_budget=None) -> MorselPrefetcher:
         """Asynchronous scan: a background thread reads morsel N+1 from
         storage and transfers it to the device while morsel N computes
         (double-buffered at ``prefetch_depth``). Returns an iterator of
@@ -92,7 +93,7 @@ class TableSource:
             gen = self._host_morsels(num_workers, columns, batch_rows,
                                      filter_expr, stats=stats)
         return MorselPrefetcher(gen, depth=prefetch_depth, sharding=sharding,
-                                stats=stats)
+                                stats=stats, host_budget=host_budget)
 
     def num_rows(self) -> int:
         """Total rows in the table (catalog statistic the optimizer uses)."""
@@ -234,12 +235,30 @@ class Session:
     # repro.kernels Pallas kernels; interpret mode off-TPU). None defers
     # to the REPRO_KERNEL_BACKEND env var, defaulting to 'jnp'.
     kernel_backend: Optional[str] = None
+    # tiered-memory spill (core.spill): a device-memory budget in bytes
+    # turns on out-of-core execution — every query gets a SpillManager and
+    # the memory-hungry operators degrade through host buffers and paged
+    # disk files instead of exceeding the budget. None = in-memory only.
+    device_budget: Optional[int] = None
+    # host-tier cap shared by spilled partitions and prefetched morsels
+    host_budget: int = 1 << 31
+    # directory for paged spill files (None = per-query temp dirs)
+    spill_dir: Optional[str] = None
+    # hard ceiling for the disk tier (the only tier that rejects work)
+    disk_ceiling: int = 1 << 38
     # scheduler knobs (core.scheduler.SchedulerConfig); None = defaults.
     # Assign before the first submit()/run() — the scheduler is built lazily.
     scheduler_config: Optional[object] = None
 
     def context(self) -> ExecutionContext:
-        """Snapshot this session's execution config for one Driver run."""
+        """Snapshot this session's execution config for one Driver run
+        (each context gets its own per-query ``SpillManager``)."""
+        spill = None
+        if self.device_budget is not None:
+            from .spill import SpillManager
+            spill = SpillManager(self.device_budget, self.host_budget,
+                                 spill_dir=self.spill_dir,
+                                 disk_ceiling=self.disk_ceiling)
         return ExecutionContext(
             catalog=self.catalog,
             num_workers=self.num_workers,
@@ -250,6 +269,7 @@ class Session:
             streaming=self.streaming,
             prefetch_depth=self.prefetch_depth,
             kernel_backend=self.kernel_backend,
+            spill=spill,
         )
 
     def execute(self, plan: PlanNode) -> Dict[str, np.ndarray]:
@@ -350,15 +370,22 @@ class Session:
         With ``analyze=True`` the (optimized) plan is also executed and the
         executor's per-table scan stats -- bytes read, bytes transferred,
         chunks skipped by zone maps, prefetch-overlap fraction -- plus
-        operator timings and per-fragment exchange stats (rows/bytes moved,
-        host-staged bytes per Repartition/Broadcast) are appended
-        (EXPLAIN ANALYZE)."""
-        from .optimizer import explain_before_after
+        operator timings, per-fragment exchange stats (rows/bytes moved,
+        host-staged bytes per Repartition/Broadcast), the per-operator
+        memory-footprint breakdown, and -- when a ``device_budget`` is set
+        -- the spill-cost estimate and observed per-tier spill counters
+        are appended (EXPLAIN ANALYZE)."""
+        from .optimizer import (estimate_memory_breakdown,
+                                explain_before_after)
         text = explain_before_after(plan, self.catalog,
                                     config=self.optimizer_config())
         if not analyze:
             return text
-        self.execute(self.optimize(plan))
+        optimized = self.optimize(plan)
+        breakdown = estimate_memory_breakdown(
+            optimized, self.catalog, num_workers=self.num_workers,
+            batch_rows=self.batch_rows, prefetch_depth=self.prefetch_depth)
+        self.execute(optimized)
         lines = ["== executor stats =="]
         stats = self.executor_stats()
         for tname, s in sorted(stats.get("tables", {}).items()):
@@ -383,4 +410,19 @@ class Session:
                 f"bytes_moved={ex['bytes_moved']} "
                 f"host_staged_bytes={ex['host_staged_bytes']} "
                 f"{ex['seconds']:.4f}s")
+        lines.append("== memory ==")
+        lines.extend(breakdown.describe(self.device_budget,
+                                        self.host_budget).splitlines())
+        spill = stats.get("spill") or {}
+        if spill:
+            lines.append(
+                f"spill: reserved_peak={spill['reserved_peak']} "
+                f"reserve_denials={spill['reserve_denials']} "
+                f"staged_exchanges={stats.get('spill_staged_exchanges', 0)}")
+            for tier in ("host", "disk"):
+                t = spill[tier]
+                lines.append(
+                    f"spill {tier} tier: spilled_bytes={t['spilled_bytes']} "
+                    f"restored_bytes={t['restored_bytes']} "
+                    f"spills={t['spills']} restores={t['restores']}")
         return text + "\n" + "\n".join(lines)

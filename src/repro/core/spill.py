@@ -1,0 +1,523 @@
+"""Tiered-memory spill subsystem: device -> pinned host -> paged disk.
+
+The paper's pipeline assumes working sets that fit device memory; Theseus
+and "Terabyte-Scale Analytics in the Blink of an Eye" (PAPERS.md) make the
+opposite bet -- a memory *hierarchy* where operators degrade gracefully
+instead of the coordinator refusing work. This module is that hierarchy for
+the repro engine:
+
+* ``SpillManager``     -- owns one query's device-memory budget. Operators
+                          take *reservations* against it (grace join build
+                          sides, aggregation accumulators, exchange send
+                          buffers); partitions that do not fit move down the
+                          hierarchy: device arrays are pulled into host
+                          buffers, and when the host budget fills, victim
+                          partitions are written as ``storage.paged`` files
+                          on disk (the same page/row-group format
+                          ``PagedTableSource`` reads). Every byte crossing a
+                          tier boundary is accounted per tier.
+* ``HostMemoryBudget`` -- the shared host-bytes meter: the spill manager's
+                          host tier and every ``MorselPrefetcher`` bounded
+                          queue draw from the same budget, so prefetched
+                          morsels and spilled partitions cannot together
+                          exceed the configured host memory.
+
+Spilled partitions round-trip **bit-exactly**: integer columns are stored
+through the paged format's plain-encoded byte pages (its delta encoding is
+not wrap-safe for arbitrary int64 data), floats/bools/bytes are plain pages
+already, and validity masks ride along as a ``bool`` column. Shapes
+(worker-stacked ``[W, cap]`` or local ``[cap]``) are preserved through a
+flatten/reshape recorded on the in-memory handle.
+
+Victim selection is largest-first: when the host tier must make room, the
+biggest resident partition is written to disk (fewest disk I/Os per byte
+freed). ``SpillCapacityError`` is raised only when the *disk* ceiling is
+exceeded -- the runtime counterpart of the scheduler's admission rule that
+over-budget queries are admitted with a priced slowdown and rejected only
+past the hard disk ceiling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import tempfile
+import threading
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from . import dtypes as dt
+from .table import DeviceTable
+
+
+class SpillCapacityError(RuntimeError):
+    """The spill hierarchy's *disk* ceiling was exceeded (the only tier
+    with a hard limit; device/host overflow cascades downward instead)."""
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TierStats:
+    """Byte/event counters for one tier boundary of the hierarchy."""
+
+    spilled_bytes: int = 0      # bytes written into this tier
+    restored_bytes: int = 0     # bytes read back out of this tier
+    spills: int = 0             # partitions written
+    restores: int = 0           # partitions read back
+
+    def summary(self) -> Dict[str, int]:
+        """Counters as a plain dict (for ``executor_stats`` reporting)."""
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SpillStats:
+    """Per-tier accounting for one ``SpillManager`` (one query).
+
+    ``host`` counts device->host movement (every spill lands here first);
+    ``disk`` counts host->disk victim writes and their restores. Device
+    pressure shows up as ``reserved_peak`` vs the budget.
+    """
+
+    host: TierStats = dataclasses.field(default_factory=TierStats)
+    disk: TierStats = dataclasses.field(default_factory=TierStats)
+    reserved_peak: int = 0      # high-water mark of device reservations
+    reserve_denials: int = 0    # reservations that did not fit in full
+
+    @property
+    def spilled_bytes(self) -> int:
+        """Total bytes that left the device tier (host + disk writes count
+        once: disk writes are host-tier bytes moved further down)."""
+        return self.host.spilled_bytes
+
+    def summary(self) -> Dict[str, object]:
+        """Nested per-tier counter dict (for ``executor_stats``/explain)."""
+        return {
+            "host": self.host.summary(),
+            "disk": self.disk.summary(),
+            "reserved_peak": self.reserved_peak,
+            "reserve_denials": self.reserve_denials,
+            "spilled_bytes": self.spilled_bytes,
+        }
+
+
+class HostMemoryBudget:
+    """Shared host-bytes meter with blocking acquisition.
+
+    One instance is shared by a query's spill manager (non-blocking
+    ``try_acquire``: on denial the partition cascades to disk) and its
+    ``MorselPrefetcher`` threads (blocking ``acquire``: storage reads stall
+    until the consumer drains). Progress is guaranteed: a request is always
+    admitted when nothing is currently held, so a single morsel or
+    partition larger than the whole budget still flows (over-subscribed,
+    never deadlocked).
+    """
+
+    def __init__(self, max_bytes: int):
+        self.max_bytes = max(int(max_bytes), 0)
+        self._in_use = 0
+        self._cond = threading.Condition()
+        # pressure relief valve: a blocked acquire() calls this (outside
+        # the lock) to ask the holder of the budget to give some back.
+        # The sharing SpillManager registers its evict-to-disk hook here,
+        # so host bytes parked by spilled partitions can never deadlock a
+        # prefetcher that shares the meter (the partitions sink to disk).
+        self.pressure = None      # Optional[Callable[[], bool]]
+
+    @property
+    def in_use(self) -> int:
+        """Bytes currently held against the budget."""
+        with self._cond:
+            return self._in_use
+
+    def _fits(self, nbytes: int) -> bool:
+        return self._in_use == 0 or self._in_use + nbytes <= self.max_bytes
+
+    def try_acquire(self, nbytes: int) -> bool:
+        """Non-blocking: reserve ``nbytes`` of host memory if it fits."""
+        with self._cond:
+            if self._fits(nbytes):
+                self._in_use += nbytes
+                return True
+            return False
+
+    def acquire(self, nbytes: int, stop=None) -> bool:
+        """Block until ``nbytes`` fits (or ``stop()`` turns true),
+        applying pressure to the spill store while waiting."""
+        while True:
+            with self._cond:
+                if self._fits(nbytes):
+                    self._in_use += nbytes
+                    return True
+                if stop is not None and stop():
+                    return False
+            relief = self.pressure
+            if relief is not None and relief():
+                continue              # something was evicted: retry now
+            with self._cond:
+                if self._fits(nbytes):
+                    self._in_use += nbytes
+                    return True
+                if stop is not None and stop():
+                    return False
+                self._cond.wait(timeout=0.05)
+
+    def release(self, nbytes: int) -> None:
+        """Return ``nbytes`` to the budget and wake blocked acquirers."""
+        with self._cond:
+            self._in_use = max(0, self._in_use - nbytes)
+            self._cond.notify_all()
+
+
+# ---------------------------------------------------------------------------
+# spilled-partition payloads
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _HostPartition:
+    """One spilled partition resident in the host tier: raw column arrays
+    (validity included, shapes preserved) + schema."""
+
+    columns: Dict[str, np.ndarray]
+    validity: np.ndarray
+    schema: Dict[str, dt.DType]
+    nbytes: int
+
+
+@dataclasses.dataclass
+class _DiskPartition:
+    """One spilled partition written to a paged file: the codec metadata
+    needed to restore it bit-exactly -- per-column ``(shape, dtype_str)``
+    of the *physical* arrays (which may differ from the logical schema:
+    with ``jax_enable_x64`` off an INT64 column is physically int32)."""
+
+    path_root: str
+    file_name: str
+    layout: Dict[str, tuple]        # name -> (shape, numpy dtype str)
+    schema: Dict[str, dt.DType]
+    nbytes: int
+
+
+# physical float/bool dtypes the paged format plain-encodes as-is
+_PLAIN_DTYPES = {"float32": dt.FLOAT32, "float64": dt.FLOAT64,
+                 "bool": dt.BOOL}
+
+
+def _flatten_codec(columns: Dict[str, np.ndarray], validity: np.ndarray,
+                   schema: Dict[str, dt.DType]):
+    """Encode a partition for the paged on-disk format, bit-exactly.
+
+    The paged format delta-encodes integer columns with int32 deltas, which
+    is not wrap-safe for arbitrary values -- so integer columns are stored
+    as plain byte pages (``bytes`` dtype of the element width) and floats/
+    bools as themselves (plain-encoded already). Encoding keys off each
+    array's *physical* dtype (the logical schema may promise a wider type
+    than the x64-disabled device holds); leading dims (worker stacking)
+    are flattened, and shapes/dtypes return via the handle's layout.
+    """
+    data, disk_schema, layout = {}, {}, {}
+    for name, arr in columns.items():
+        d = schema[name]
+        arr = np.ascontiguousarray(arr)
+        layout[name] = (arr.shape, arr.dtype.str)
+        if d.name == "bytes":
+            data[name] = arr.reshape(-1, d.width)
+            disk_schema[name] = dt.bytes_(d.width)
+        elif str(arr.dtype) in _PLAIN_DTYPES:
+            data[name] = arr.reshape(-1)
+            disk_schema[name] = _PLAIN_DTYPES[str(arr.dtype)]
+        else:
+            item = arr.dtype.itemsize
+            flat = arr.reshape(-1)
+            data[name] = flat.view(np.uint8).reshape(len(flat), item)
+            disk_schema[name] = dt.bytes_(item)
+    validity = np.ascontiguousarray(validity).astype(bool, copy=False)
+    layout["__validity"] = (validity.shape, validity.dtype.str)
+    data["__validity"] = validity.reshape(-1)
+    disk_schema["__validity"] = dt.BOOL
+    return data, disk_schema, layout
+
+
+def _restore_codec(reader, layout: Dict[str, tuple],
+                   schema: Dict[str, dt.DType]):
+    """Invert ``_flatten_codec`` from a ``storage.paged.PagedTable``."""
+    columns = {}
+    for name, d in schema.items():
+        shape, dtype_str = layout[name]
+        raw = np.asarray(reader.read_column(name))
+        if d.name == "bytes" or str(raw.dtype) in _PLAIN_DTYPES:
+            arr = raw
+        else:
+            arr = np.frombuffer(np.ascontiguousarray(raw).tobytes(),
+                                dtype=np.dtype(dtype_str))
+        columns[name] = arr.reshape(shape)
+    v_shape, _ = layout["__validity"]
+    validity = np.asarray(reader.read_column("__validity"),
+                          dtype=bool).reshape(v_shape)
+    return columns, validity
+
+
+# ---------------------------------------------------------------------------
+# SpillManager
+# ---------------------------------------------------------------------------
+
+class SpillManager:
+    """Owns one query's device budget and the host/disk spill stores.
+
+    * ``reserve``/``release`` track per-operator device-memory
+      reservations against ``device_budget`` (best-effort grants: the
+      caller sizes its working set -- e.g. grace-join partition count --
+      from what it was granted).
+    * ``spill_table``/``put_host`` move a partition out of device memory
+      into the host store, cascading largest-first victims to paged disk
+      files when the host budget fills.
+    * ``restore`` brings a partition back as a ``DeviceTable`` (and drops
+      it from the store); ``restore_host`` returns the raw host arrays.
+
+    One manager serves one query (the scheduler builds one per admitted
+    over-budget query); ``close()`` removes its spill directory.
+    """
+
+    def __init__(self, device_budget: int, host_budget: int = 1 << 31,
+                 spill_dir: Optional[str] = None,
+                 disk_ceiling: int = 1 << 38,
+                 host_memory: Optional[HostMemoryBudget] = None):
+        self.device_budget = max(int(device_budget), 0)
+        self.disk_ceiling = int(disk_ceiling)
+        self.host = host_memory or HostMemoryBudget(host_budget)
+        self._spill_dir = spill_dir
+        self._own_dir: Optional[str] = None
+        self._lock = threading.RLock()
+        self._reserved: Dict[str, int] = {}
+        # host store kept in insertion order; victims picked largest-first
+        self._host_store: Dict[object, _HostPartition] = {}
+        self._disk_store: Dict[object, _DiskPartition] = {}
+        self._disk_in_use = 0
+        self._seq = 0
+        self.stats = SpillStats()
+        self.host.pressure = self._evict_one
+
+    # -- device reservations -------------------------------------------------
+    def reserve(self, op: str, want: int, minimum: int = 0) -> int:
+        """Grant ``op`` between ``minimum`` and ``want`` bytes of the
+        device budget (best effort). The grant never drops below
+        ``minimum`` -- over-subscribing the budget if needed so operators
+        always make progress -- and is recorded against ``op`` until
+        ``release``."""
+        want = max(int(want), 0)
+        minimum = max(int(minimum), 0)
+        with self._lock:
+            available = self.device_budget - self.device_reserved()
+            granted = max(min(want, available), minimum)
+            if granted < want:
+                self.stats.reserve_denials += 1
+            self._reserved[op] = self._reserved.get(op, 0) + granted
+            self.stats.reserved_peak = max(self.stats.reserved_peak,
+                                           self.device_reserved())
+            return granted
+
+    def release(self, op: str, nbytes: Optional[int] = None) -> None:
+        """Return ``op``'s reservation (all of it when ``nbytes`` is
+        None)."""
+        with self._lock:
+            held = self._reserved.get(op, 0)
+            if nbytes is None or nbytes >= held:
+                self._reserved.pop(op, None)
+            else:
+                self._reserved[op] = held - nbytes
+
+    def reserved(self, op: str) -> int:
+        """Bytes currently reserved by ``op``."""
+        with self._lock:
+            return self._reserved.get(op, 0)
+
+    def device_reserved(self) -> int:
+        """Total device bytes reserved across operators."""
+        return sum(self._reserved.values())
+
+    def device_available(self) -> int:
+        """Unreserved device budget (can go negative when over-subscribed
+        via ``minimum`` grants)."""
+        with self._lock:
+            return self.device_budget - self.device_reserved()
+
+    def should_stage(self, nbytes: int) -> bool:
+        """True when a transient buffer of ``nbytes`` does not fit the
+        unreserved device budget (the exchange path stages such buffers
+        through the spill store)."""
+        return nbytes > max(self.device_available(), 0)
+
+    # -- spill / restore ------------------------------------------------------
+    def spill_table(self, key, table: DeviceTable) -> int:
+        """Move a device table into the spill hierarchy; returns the bytes
+        that left the device tier."""
+        columns = {n: np.asarray(a) for n, a in table.columns.items()}
+        validity = np.asarray(table.validity)
+        return self.put_host(key, columns, validity, table.schema)
+
+    def put_host(self, key, columns: Dict[str, np.ndarray],
+                 validity: np.ndarray, schema: Dict[str, dt.DType]) -> int:
+        """Insert raw host arrays as a spilled partition under ``key``."""
+        nbytes = int(validity.nbytes + sum(a.nbytes for a in columns.values()))
+        part = _HostPartition(dict(columns), validity, dict(schema), nbytes)
+        with self._lock:
+            assert key not in self._host_store and key not in self._disk_store, \
+                f"duplicate spill key {key!r}"
+            self.stats.host.spilled_bytes += nbytes
+            self.stats.host.spills += 1
+            if self.host.try_acquire(nbytes):
+                self._host_store[key] = part
+                self._make_room()
+            else:
+                self._write_disk(key, part)
+        return nbytes
+
+    def _make_room(self) -> None:
+        """Largest-first victim selection: while the host tier is over
+        budget (prefetched morsels share the meter), write the biggest
+        resident partition to disk (held lock). Unlike the prefetcher's
+        blocking path, spilled partitions have a lower tier to fall to --
+        so even a sole oversize partition is evicted rather than letting
+        it squat over the budget."""
+        while (self.host.in_use > self.host.max_bytes
+               and self._host_store):
+            victim = max(self._host_store, key=lambda k: self._host_store[k].nbytes)
+            part = self._host_store.pop(victim)
+            self.host.release(part.nbytes)
+            self._write_disk(victim, part)
+
+    def _evict_one(self) -> bool:
+        """Host-budget pressure callback: sink the largest host-tier
+        partition to disk so a blocked acquirer (e.g. a prefetcher
+        sharing the meter) can proceed. Returns True when bytes moved."""
+        with self._lock:
+            if not self._host_store:
+                return False
+            victim = max(self._host_store,
+                         key=lambda k: self._host_store[k].nbytes)
+            part = self._host_store[victim]
+            self._write_disk(victim, part)
+            del self._host_store[victim]
+            self.host.release(part.nbytes)
+            return True
+
+    def _write_disk(self, key, part: _HostPartition) -> None:
+        if self._disk_in_use + part.nbytes > self.disk_ceiling:
+            raise SpillCapacityError(
+                f"spill of {part.nbytes} B would exceed the disk ceiling "
+                f"({self.disk_ceiling} B, {self._disk_in_use} B in use)")
+        from ..storage.paged import write_paged_table
+        root = self._dir()
+        name = f"spill{self._seq}"
+        self._seq += 1
+        data, disk_schema, layout = _flatten_codec(part.columns, part.validity,
+                                                   part.schema)
+        write_paged_table(root, name, data, disk_schema, row_groups=1)
+        self._disk_store[key] = _DiskPartition(root, name, layout,
+                                               part.schema, part.nbytes)
+        self._disk_in_use += part.nbytes
+        self.stats.disk.spilled_bytes += part.nbytes
+        self.stats.disk.spills += 1
+
+    def restore_host(self, key) -> Tuple[Dict[str, np.ndarray], np.ndarray,
+                                         Dict[str, dt.DType]]:
+        """Pop a spilled partition back to host arrays (columns, validity,
+        schema), reading it from whichever tier holds it."""
+        with self._lock:
+            if key in self._host_store:
+                part = self._host_store.pop(key)
+                self.host.release(part.nbytes)
+                self.stats.host.restored_bytes += part.nbytes
+                self.stats.host.restores += 1
+                return part.columns, part.validity, part.schema
+            entry = self._disk_store.pop(key)
+            self._disk_in_use -= entry.nbytes
+        from ..storage.paged import PagedTable
+        reader = PagedTable(entry.path_root, entry.file_name)
+        disk_schema = {n: d for n, d in entry.schema.items()}
+        columns, validity = _restore_codec(reader, entry.layout, disk_schema)
+        with self._lock:
+            self.stats.disk.restored_bytes += entry.nbytes
+            self.stats.disk.restores += 1
+            self.stats.host.restored_bytes += entry.nbytes
+            self.stats.host.restores += 1
+        try:
+            os.remove(os.path.join(entry.path_root, f"{entry.file_name}.paged"))
+        except OSError:
+            pass
+        return columns, validity, entry.schema
+
+    def restore(self, key) -> DeviceTable:
+        """Pop a spilled partition back into device memory."""
+        import jax.numpy as jnp
+        columns, validity, schema = self.restore_host(key)
+        cols = {n: jnp.asarray(a) for n, a in columns.items()}
+        return DeviceTable(cols, jnp.asarray(validity), dict(schema))
+
+    def has(self, key) -> bool:
+        """True if ``key`` is resident in the host or disk tier."""
+        with self._lock:
+            return key in self._host_store or key in self._disk_store
+
+    def tier_of(self, key) -> Optional[str]:
+        """'host' | 'disk' | None -- which tier currently holds ``key``."""
+        with self._lock:
+            if key in self._host_store:
+                return "host"
+            if key in self._disk_store:
+                return "disk"
+            return None
+
+    def keys(self) -> List[object]:
+        """All spilled partition keys, host tier first."""
+        with self._lock:
+            return list(self._host_store) + list(self._disk_store)
+
+    def drop(self, key) -> None:
+        """Discard a spilled partition without restoring it."""
+        with self._lock:
+            part = self._host_store.pop(key, None)
+            if part is not None:
+                self.host.release(part.nbytes)
+                return
+            entry = self._disk_store.pop(key, None)
+            if entry is None:
+                return
+            self._disk_in_use -= entry.nbytes
+        try:
+            os.remove(os.path.join(entry.path_root, f"{entry.file_name}.paged"))
+        except OSError:
+            pass
+
+    # -- lifecycle ------------------------------------------------------------
+    def _dir(self) -> str:
+        if self._spill_dir is not None:
+            os.makedirs(self._spill_dir, exist_ok=True)
+            return self._spill_dir
+        if self._own_dir is None:
+            self._own_dir = tempfile.mkdtemp(prefix="repro-spill-")
+        return self._own_dir
+
+    def close(self) -> None:
+        """Release host bytes and delete this manager's spill files
+        (counters survive for ``executor_stats``)."""
+        self.host.pressure = None
+        with self._lock:
+            for part in self._host_store.values():
+                self.host.release(part.nbytes)
+            self._host_store.clear()
+            self._disk_store.clear()
+            self._disk_in_use = 0
+            own, self._own_dir = self._own_dir, None
+        if own is not None:
+            shutil.rmtree(own, ignore_errors=True)
+
+
+def spill_run_keys(prefix: str, n: int) -> Iterable[Tuple[str, int]]:
+    """Key sequence for ``n`` spilled runs of one operator."""
+    return [(prefix, i) for i in range(n)]

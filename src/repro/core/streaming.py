@@ -145,17 +145,29 @@ class MorselPrefetcher:
     N, morsel N+1 is being read and transferred. The queue bound caps device
     memory at ``depth`` in-flight morsels beyond the one being computed.
 
+    The bound is additionally **bytes-aware**: with a ``host_budget``
+    (``core.spill.HostMemoryBudget``, shared with the spill manager's host
+    tier) or a private ``max_bytes`` cap, the producer blocks until the
+    buffered morsels' host bytes fit the budget -- so prefetch participates
+    in the same host-memory accounting as spilled partitions instead of
+    only counting morsels.
+
     Iteration is single-consumer. Abandoning the iterator early (e.g. a
     Limit downstream) stops the producer; producer exceptions re-raise in
     the consumer.
     """
 
     def __init__(self, host_morsels: Iterator[HostMorsel], depth: int = 2,
-                 sharding=None, stats: Optional[ScanStats] = None):
+                 sharding=None, stats: Optional[ScanStats] = None,
+                 host_budget=None, max_bytes: Optional[int] = None):
         self.stats = stats if stats is not None else ScanStats()
         self._gen = host_morsels
         self._sharding = sharding
         self._q: "queue.Queue" = queue.Queue(maxsize=max(int(depth), 1))
+        if host_budget is None and max_bytes is not None:
+            from .spill import HostMemoryBudget
+            host_budget = HostMemoryBudget(max_bytes)
+        self._budget = host_budget
         self._closed = threading.Event()
         self._thread = threading.Thread(target=self._produce, daemon=True,
                                         name="morsel-prefetch")
@@ -179,11 +191,20 @@ class MorselPrefetcher:
                     host = next(it)
                 except StopIteration:
                     break
+                nbytes = host.nbytes()   # HostMorsel or DeviceTable alike
+                if self._budget is not None:
+                    # bytes-aware backpressure: stall the storage read
+                    # until the buffered morsels fit the host budget
+                    if not self._budget.acquire(nbytes,
+                                                stop=self._closed.is_set):
+                        return
                 table = morsel_to_device(host, self._sharding)
                 self.stats.read_seconds += time.perf_counter() - t0
-                self.stats.bytes_transferred += host.nbytes()
+                self.stats.bytes_transferred += nbytes
                 self.stats.morsels += 1
-                if not self._put(table):
+                if not self._put((table, nbytes)):
+                    if self._budget is not None:
+                        self._budget.release(nbytes)
                     return
             self._put(_SENTINEL)
         except BaseException as exc:  # noqa: BLE001 -- re-raised by consumer
@@ -193,6 +214,15 @@ class MorselPrefetcher:
     def close(self) -> None:
         """Stop the producer thread (also called when iteration ends)."""
         self._closed.set()
+        if self._budget is not None:
+            # return budget held by undrained queued morsels
+            while True:
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    break
+                if isinstance(item, tuple):
+                    self._budget.release(item[1])
 
     def __iter__(self) -> Iterator[DeviceTable]:
         self._thread.start()
@@ -210,6 +240,9 @@ class MorselPrefetcher:
                     return
                 if isinstance(item, BaseException):
                     raise item
-                yield item
+                table, nbytes = item
+                if self._budget is not None:
+                    self._budget.release(nbytes)
+                yield table
         finally:
             self.close()

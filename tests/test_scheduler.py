@@ -66,12 +66,38 @@ def _wait_until_running(session, n: int, timeout: float = 10.0) -> None:
 # admission control
 # ---------------------------------------------------------------------------
 
-def test_over_budget_query_rejected(catalog):
+def test_over_disk_ceiling_query_rejected(catalog):
+    # past the spill disk ceiling not even the disk tier absorbs the
+    # excess: the query is rejected, with an explainable breakdown
     session = Session(catalog, num_workers=1)
-    session.scheduler_config = SchedulerConfig(memory_budget=1024)
-    with pytest.raises(QueryRejected, match="memory budget"):
+    session.scheduler_config = SchedulerConfig(memory_budget=1024,
+                                               spill_disk_ceiling=1024)
+    with pytest.raises(QueryRejected, match="memory budget") as ei:
         session.submit(queries.build_query(1, catalog))
+    # the message alone explains the decision: per-operator footprint
+    # breakdown plus the tier-crossing spill-cost estimate
+    msg = str(ei.value)
+    assert "TableScan(lineitem)" in msg and "spill cost" in msg
     assert session.scheduler().stats()["rejected"] == 1
+
+
+def test_over_budget_query_admitted_with_spill(catalog, data):
+    # over the memory budget but under the disk ceiling: admitted with a
+    # priced slowdown and executed out-of-core (nonzero spilled bytes)
+    session = Session(catalog, num_workers=1, batch_rows=4096)
+    session.scheduler_config = SchedulerConfig(memory_budget=64 * 1024)
+    handle = session.submit(queries.build_query(3, catalog))
+    assert handle.spill_plan is not None
+    assert handle.spill_plan["excess_bytes"] > 0
+    assert handle.spill_plan["est_slowdown"] > 1.0
+    assert handle.memory_breakdown.total == handle.footprint
+    assert handle.estimate == 64 * 1024    # charged the whole budget
+    res = handle.result(timeout=300)
+    assert_results_match(res, oracle.ORACLES[3](data), 3)
+    stats = session.scheduler().stats()
+    assert stats["spill_admitted"] == 1 and stats["rejected"] == 0
+    spill = handle.executor_stats.get("spill", {})
+    assert spill.get("spilled_bytes", 0) > 0
 
 
 def test_queue_full_backpressure(catalog):
