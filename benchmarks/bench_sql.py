@@ -1,0 +1,56 @@
+"""SQL frontend overhead: parse + lower + optimize vs the execution cost.
+
+The frontend's promise is "SQL at near-zero marginal cost": ``Session.sql``
+must add only microseconds of parse/lower work on top of the identical
+plan the fluent builder produces. This bench measures, per TPC-H text:
+
+* ``sql_parse``      -- SQL text -> AST (bundled recursive-descent parser)
+* ``sql_lower``      -- text -> QueryBuilder (parse + schema-checked
+                        lowering onto the builder)
+* ``sql_optimize``   -- text -> optimized physical plan (lower + the full
+                        rule pipeline; what a plan-cache miss costs)
+
+and once overall the end-to-end ``sql_e2e_q6`` execution so the overhead
+can be read as a fraction of runtime. Amortization across repeats is the
+scheduler's plan/result cache (keyed by the SQL text, see
+``core/scheduler.py``), measured in bench_concurrency.
+"""
+
+from __future__ import annotations
+
+from .common import emit, timeit
+
+
+def run(sf: float = 0.01) -> None:
+    from repro.core import Session
+    from repro.core.sqlast import parse as parse_sql
+    from repro.tpch import dbgen, sqltext
+
+    catalog = dbgen.load_catalog(sf=sf)
+    session = Session(catalog)
+
+    texts = {q: sqltext.sql_text(q, catalog)
+             for q in (1, 3, 6, 18)}          # agg / join / scan / heavy
+
+    for qnum, text in texts.items():
+        t_parse = timeit(lambda: parse_sql(text), warmup=2, iters=20)
+        t_lower = timeit(lambda: session.sql(text), warmup=2, iters=20)
+        t_opt = timeit(lambda: session.optimize(session.sql(text).plan),
+                       warmup=2, iters=10)
+        emit(f"sql_parse_q{qnum}", t_parse)
+        emit(f"sql_lower_q{qnum}", t_lower)
+        emit(f"sql_optimize_q{qnum}", t_opt,
+             detail={"sf": sf, "parse_s": t_parse, "lower_s": t_lower,
+                     "optimize_s": t_opt, "chars": len(text)})
+
+    t_exec = timeit(lambda: session.sql(texts[6]).collect(),
+                    warmup=1, iters=3)
+    t_lower6 = timeit(lambda: session.sql(texts[6]), warmup=2, iters=20)
+    frac = t_lower6 / t_exec if t_exec else 0.0
+    emit("sql_e2e_q6", t_exec, derived=f"lower_frac={frac:.4f}",
+         detail={"sf": sf, "lower_s": t_lower6, "exec_s": t_exec,
+                 "lower_fraction_of_runtime": frac})
+
+
+if __name__ == "__main__":
+    run()

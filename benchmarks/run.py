@@ -22,12 +22,13 @@ def main(argv=None) -> None:
     from . import (bench_barebones, bench_cold_hot, bench_concurrency,
                    bench_cost_perf, bench_exchange, bench_kernels,
                    bench_outofcore, bench_q5_scaling, bench_scaleup,
-                   bench_scan_pipeline, bench_storage_format,
+                   bench_scan_pipeline, bench_sql, bench_storage_format,
                    bench_weak_scaling)
 
     suites = [
         ("storage_format(§2.2)", bench_storage_format.run),
         ("scan_pipeline(§2.2)", bench_scan_pipeline.run),
+        ("sql(frontend)", bench_sql.run),
         ("kernels(§3.2)", bench_kernels.run),
         ("concurrency(serving)", bench_concurrency.run),
         ("barebones(Table1)", bench_barebones.run),

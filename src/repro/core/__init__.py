@@ -3,8 +3,9 @@
 Public API:
 
     from repro.core import dtypes, plan, expr
-    from repro.core.session import Session, Catalog
+    from repro.core.session import Session, Catalog, ExecutionOptions
     from repro.core.builder import QueryBuilder, table
+    from repro.core.sql import lower_sql            # or: Session.sql(text)
     from repro.core.optimizer import optimize, explain
     from repro.core.exchange import ICIExchange, HostExchange
     from repro.core.scheduler import QueryScheduler, SchedulerConfig
@@ -16,6 +17,9 @@ from .exchange import HostExchange, ICIExchange  # noqa: F401
 from .optimizer import OptimizerConfig, explain, optimize  # noqa: F401
 from .scheduler import (QueryHandle, QueryRejected,  # noqa: F401
                         QueryScheduler, SchedulerConfig)
-from .session import Catalog, Session, TableSource  # noqa: F401
+from .session import (Catalog, ExecutionOptions,  # noqa: F401
+                      Session, TableSource)
+from .sql import SqlUnsupportedError, lower_sql  # noqa: F401
+from .sqlast import SqlParseError  # noqa: F401
 from .streaming import MorselPrefetcher, ScanStats  # noqa: F401
 from .table import DeviceTable, concat_tables  # noqa: F401

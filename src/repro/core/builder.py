@@ -108,6 +108,12 @@ class QueryBuilder:
         out = handle.result()
     """
 
+    # set on the FINAL builder only (by Session.sql / lower_sql), never
+    # propagated by _derive: the SQL text a builder was lowered from (a
+    # scheduler cache-key prefix) and its attached ExecutionOptions
+    sql_text: Optional[str] = None
+    _options = None
+
     def __init__(self, plan: P.PlanNode, schema: Dict[str, dt.DType],
                  catalog, session=None):
         self.plan = plan
@@ -329,25 +335,47 @@ class QueryBuilder:
         return opt.optimize(self.plan, self._catalog,
                             config=config or self._config())
 
-    def explain(self) -> str:
-        """Plan tree before and after the optimizer pipeline."""
+    def explain(self, analyze: bool = False) -> str:
+        """Plan tree before and after the optimizer pipeline.
+
+        Session-bound builders (including every ``session.sql(...)`` query)
+        delegate to ``Session.explain``, so ``analyze=True`` additionally
+        executes the plan and annotates it with live operator metrics —
+        one explain surface for builder and SQL queries alike. Unbound
+        builders fall back to the logical before/after text
+        (``analyze=True`` then raises, as there is no session to run on).
+        """
+        if self._session is not None:
+            return self._session.explain(self.plan, analyze=analyze)
+        if analyze:
+            raise RuntimeError(
+                "explain(analyze=True) needs a session-bound builder; "
+                "build via session.table(...) or session.sql(...)")
         return opt.explain_before_after(self.plan, self._catalog,
                                         config=self._config())
 
-    def collect(self, optimize: bool = True):
+    def collect(self, optimize: bool = True, options=None):
         """Optimize and execute; requires a session-bound builder
-        (``session.table(...)``). Optimization uses the session's worker
-        count, so distributed sessions run exchange-placed fragment plans."""
+        (``session.table(...)`` / ``session.sql(...)``). Optimization uses
+        the session's worker count, so distributed sessions run
+        exchange-placed fragment plans. ``options`` (an
+        ``ExecutionOptions``) overrides worker count / kernel backend /
+        optimize for this call; when omitted, options attached by
+        ``session.sql(..., options=...)`` apply."""
         if self._session is None:
             raise RuntimeError(
                 "collect() needs a session-bound builder; build via "
                 "session.table(...) or execute to_plan()/optimized() yourself")
-        plan = self._session.optimize(self.plan) if optimize else self.plan
-        return self._session.execute(plan)
+        opts = options if options is not None else self._options
+        if opts is not None and opts.optimize is not None:
+            optimize = opts.optimize
+        sess = self._session._with_options(opts)
+        plan = sess.optimize(self.plan) if optimize else self.plan
+        return sess.execute(plan)
 
     execute = collect
 
-    def submit(self, priority: int = 0):
+    def submit(self, priority: int = 0, options=None):
         """Schedule this query concurrently; returns a ``QueryHandle``.
 
         Routes through the session's ``QueryScheduler`` (admission control,
@@ -355,12 +383,16 @@ class QueryBuilder:
 
             h = session.table("orders").limit(10).submit()
             rows = h.result()
+
+        ``options`` (an ``ExecutionOptions``) overrides priority / worker
+        count / kernel backend / optimize for this query; SQL-born builders
+        additionally key the scheduler caches by their SQL text.
         """
         if self._session is None:
             raise RuntimeError(
                 "submit() needs a session-bound builder; build via "
                 "session.table(...) or submit the plan to a session yourself")
-        return self._session.submit(self.plan, priority=priority)
+        return self._session.submit(self, priority=priority, options=options)
 
     def __repr__(self):
         return (f"QueryBuilder[{_fmt_cols(self.schema)}]\n"

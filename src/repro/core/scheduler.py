@@ -50,6 +50,7 @@ future, ``gather()`` awaits many, ``run()`` is the synchronous wrapper.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import heapq
 import itertools
 import threading
@@ -127,6 +128,9 @@ class QueryHandle:
         self.plan_cache_hit = False
         # kernel backend pinned at submit time (None until admitted)
         self.kernel_backend: Optional[str] = None
+        # worker count pinned at submit time (exchange placement and the
+        # plan/result cache keys depend on it)
+        self.num_workers: int = 1
         self._queue_skips = 0          # times passed over by backfilling
         self._versions: tuple = ()     # admission-time catalog snapshot
         self.submitted_at = time.perf_counter()
@@ -271,7 +275,11 @@ class QueryScheduler:
         self.spill_admitted = 0
 
     # -- public API ---------------------------------------------------------
-    def submit(self, plan: P.PlanNode, priority: int = 0) -> QueryHandle:
+    def submit(self, plan: P.PlanNode, priority: int = 0,
+               sql: Optional[str] = None,
+               num_workers: Optional[int] = None,
+               kernel_backend: Optional[str] = None,
+               optimize: Optional[bool] = None) -> QueryHandle:
         """Admit ``plan`` for execution; returns a ``QueryHandle``.
 
         Raises ``QueryRejected`` when the query could never fit the memory
@@ -279,23 +287,43 @@ class QueryScheduler:
         ``priority`` dequeues first; ties run in submission order. A
         duplicate of an in-flight query coalesces onto its handle (raising
         that handle's queue priority if the duplicate's is higher).
+
+        ``sql``/``num_workers``/``kernel_backend``/``optimize`` carry
+        per-query ``ExecutionOptions`` overrides: queries born from SQL
+        text prefix their plan/result cache keys with a hash of that text,
+        worker-count and backend overrides are pinned on the handle (and
+        keyed), and ``optimize=False`` runs the raw plan as-is.
         """
         # the kernel backend is resolved ONCE, here at submit time (the
-        # session's setting, else the submitting thread's use_backend()
-        # scope / env default), and pinned on the handle: the worker's
-        # ExecutionContext executes with exactly this backend, and the
-        # cache keys carry it -- so flipping the backend between submit
-        # and execution can never serve (or store) a result under the
-        # wrong backend's key, and ``with use_pallas(): session.run(q)``
-        # behaves like the batch path
-        backend = (self.session.kernel_backend
+        # per-query override, else the session's setting, else the
+        # submitting thread's use_backend() scope / env default), and
+        # pinned on the handle: the worker's ExecutionContext executes
+        # with exactly this backend, and the cache keys carry it -- so
+        # flipping the backend between submit and execution can never
+        # serve (or store) a result under the wrong backend's key, and
+        # ``with use_pallas(): session.run(q)`` behaves like the batch
+        # path
+        backend = (kernel_backend
+                   or self.session.kernel_backend
                    or kernel_ops.current_backend())
-        key = f"k={backend}:{P.fingerprint(plan)}"
+        w = num_workers if num_workers is not None \
+            else self.session.num_workers
+        # SQL-born queries prefix their cache keys with the text's hash:
+        # two different SQL texts that happen to lower to the same logical
+        # plan still share nothing, so a frontend fix that changes the
+        # lowering can never serve a stale result cached under the old
+        # reading of the same text
+        sql_prefix = ""
+        if sql is not None:
+            digest = hashlib.sha1(sql.encode("utf-8")).hexdigest()[:16]
+            sql_prefix = f"sql={digest}:"
+        key = f"{sql_prefix}w{w}:k={backend}:{P.fingerprint(plan)}"
         # result cache first: a hit skips optimization entirely
         cached = self.result_cache.get(key, self.session.catalog)
         if cached is not None:
             handle = QueryHandle(next(self._ids), plan, priority, 0)
             handle.kernel_backend = backend
+            handle.num_workers = w
             handle.cache_hit = True
             handle.started_at = time.perf_counter()
             handle._complete(result=cached)
@@ -303,13 +331,23 @@ class QueryScheduler:
                 self.completed += 1
             return handle
 
-        optimized, plan_hit = self._optimized(plan, key)
-        breakdown = estimate_memory_breakdown(
-            optimized, self.session.catalog,
-            num_workers=self.session.num_workers,
-            batch_rows=self.session.batch_rows,
-            prefetch_depth=self.session.prefetch_depth)
-        est = breakdown.total
+        if optimize is False:
+            optimized, plan_hit = plan, False
+        else:
+            optimized, plan_hit = self._optimized(plan, key, w)
+        try:
+            breakdown = estimate_memory_breakdown(
+                optimized, self.session.catalog,
+                num_workers=w,
+                batch_rows=self.session.batch_rows,
+                prefetch_depth=self.session.prefetch_depth)
+            est = breakdown.total
+        except TypeError:
+            if optimize is not False:
+                raise
+            # un-optimized plans may lack derived capacities; admit them
+            # conservatively with no estimate rather than refuse
+            breakdown, est = None, 0
         # over-budget queries are admitted with spilling: they charge the
         # whole budget (running effectively alone) and degrade through the
         # host/disk tiers instead of being refused
@@ -319,6 +357,7 @@ class QueryScheduler:
         handle.memory_breakdown = breakdown
         handle.plan_cache_hit = plan_hit
         handle.kernel_backend = backend
+        handle.num_workers = w
         # version snapshot taken NOW: if a table is re-registered while the
         # query runs, the snapshot no longer matches at the next lookup and
         # the (stale) result is never served from cache
@@ -421,19 +460,21 @@ class QueryScheduler:
                 t.join(timeout=30.0)
 
     # -- internals ----------------------------------------------------------
-    def _optimized(self, plan: P.PlanNode,
-                   raw_key: str) -> Tuple[P.PlanNode, bool]:
-        """Optimized plan via the plan cache (keyed on the raw tree's
-        already-computed fingerprint plus the planned worker count —
-        exchange placement makes the physical plan W-dependent). Versions
+    def _optimized(self, plan: P.PlanNode, raw_key: str,
+                   w: int) -> Tuple[P.PlanNode, bool]:
+        """Optimized plan via the plan cache. ``raw_key`` already carries
+        the SQL-text prefix (when the query came from ``Session.sql``), the
+        planned worker count (exchange placement makes the physical plan
+        W-dependent), the backend, and the raw tree's fingerprint. Versions
         are snapshot *before* optimization, which reads catalog stats."""
-        key = f"opt:w{self.session.num_workers}:" + raw_key
+        key = "opt:" + raw_key
         cached = self.plan_cache.get(key, self.session.catalog)
         if cached is not None:
             return cached, True
         versions = self.session.catalog.versions(referenced_tables(plan))
-        optimized = optimize(plan, self.session.catalog,
-                             config=self.session.optimizer_config())
+        config = dataclasses.replace(self.session.optimizer_config(),
+                                     num_workers=w)
+        optimized = optimize(plan, self.session.catalog, config=config)
         self.plan_cache.put(key, versions, optimized)
         return optimized, False
 
@@ -501,7 +542,14 @@ class QueryScheduler:
         """Run one admitted query on this worker thread's own Driver."""
         handle.started_at = time.perf_counter()
         try:
-            ctx = self.session.context()
+            sess = self.session
+            if handle.num_workers != sess.num_workers:
+                # per-query worker-count override: rebuild the context
+                # from a session clone so the exchange/mesh wiring matches
+                # the W the plan was optimized for
+                sess = dataclasses.replace(
+                    sess, num_workers=handle.num_workers)
+            ctx = sess.context()
             # pin the backend resolved at submit time (the cache key was
             # computed from it; the worker thread's ambient default may
             # differ by now)

@@ -186,6 +186,34 @@ class Catalog:
         return tuple(sorted((n, self.version(n)) for n in names))
 
 
+@dataclasses.dataclass(frozen=True)
+class ExecutionOptions:
+    """Per-query execution options, accepted uniformly by every entry
+    point: ``Session.run``/``submit``/``execute``/``sql``,
+    ``QueryBuilder.collect``/``submit``. ``None`` fields inherit the
+    session (or call-site) defaults, so ``ExecutionOptions()`` is always a
+    no-op::
+
+        opts = ExecutionOptions(num_workers=2, kernel_backend="pallas")
+        session.sql("SELECT count(*) AS n FROM orders", options=opts).collect()
+        session.run(query, options=ExecutionOptions(priority=2))
+
+    The legacy per-method keywords (``run(query, priority=...)``,
+    ``collect(optimize=...)``, ``submit(priority=...)``) remain as thin
+    shims; an explicit field here wins over them.
+    """
+
+    # scheduler queue priority (submit/run path; higher dequeues first)
+    priority: Optional[int] = None
+    # worker count for this query only (optimizer exchange placement and
+    # the execution context both honor it)
+    num_workers: Optional[int] = None
+    # kernel backend ('jnp' | 'pallas') for this query only
+    kernel_backend: Optional[str] = None
+    # run the logical optimizer before execution (default True)
+    optimize: Optional[bool] = None
+
+
 @dataclasses.dataclass
 class Session:
     """The engine's public entry point: a catalog bound to an execution
@@ -272,14 +300,30 @@ class Session:
             spill=spill,
         )
 
-    def execute(self, plan: PlanNode) -> Dict[str, np.ndarray]:
+    def _with_options(self, options: Optional[ExecutionOptions]) -> "Session":
+        """Session view with per-query overrides applied (direct path)."""
+        if options is None:
+            return self
+        repl = {}
+        if options.num_workers is not None:
+            repl["num_workers"] = options.num_workers
+        if options.kernel_backend is not None:
+            repl["kernel_backend"] = options.kernel_backend
+        return dataclasses.replace(self, **repl) if repl else self
+
+    def execute(self, plan: PlanNode,
+                options: Optional[ExecutionOptions] = None
+                ) -> Dict[str, np.ndarray]:
         """Execute one plan on this thread; returns name -> numpy column.
 
         This is the direct batch path: no admission control, no caches.
         Serving workloads should prefer ``run``/``submit``, which route
-        through the scheduler.
+        through the scheduler. ``options`` applies per-query
+        ``num_workers``/``kernel_backend`` overrides (``priority`` is
+        meaningless here; ``optimize`` is the caller's job — ``execute``
+        runs the plan exactly as given).
         """
-        driver = Driver(self.context())
+        driver = Driver(self._with_options(options).context())
         self.last_driver = driver
         return driver.collect(plan)
 
@@ -311,31 +355,50 @@ class Session:
             sched.close(wait=False)
             self._scheduler = None
 
-    def submit(self, query, priority: int = 0):
+    def submit(self, query, priority: int = 0,
+               options: Optional[ExecutionOptions] = None):
         """Submit a query for scheduled execution; returns a ``QueryHandle``.
 
         ``query`` is a ``PlanNode`` or a ``QueryBuilder`` (its plan is
-        taken as-built; the scheduler optimizes through the plan cache).
-        Raises ``QueryRejected`` when admission control refuses it::
+        taken as-built; the scheduler optimizes through the plan cache —
+        for SQL-frontend builders the originating SQL text prefixes the
+        cache keys). ``options`` carries per-query overrides
+        (``ExecutionOptions``); a builder from ``session.sql(...,
+        options=...)`` brings its own unless overridden here. Raises
+        ``QueryRejected`` when admission control refuses it::
 
             h = session.submit(session.table("lineitem").limit(5), priority=1)
             rows = h.result()
         """
         plan = query.plan if hasattr(query, "plan") else query
-        return self.scheduler().submit(plan, priority=priority)
+        if options is None:
+            options = getattr(query, "_options", None)
+        sql = getattr(query, "sql_text", None)
+        opts = options or ExecutionOptions()
+        if opts.priority is not None:
+            priority = opts.priority
+        return self.scheduler().submit(
+            plan, priority=priority, sql=sql,
+            num_workers=opts.num_workers,
+            kernel_backend=opts.kernel_backend,
+            optimize=opts.optimize)
 
     def gather(self, *handles) -> list:
         """Wait for ``submit`` handles; results in argument order."""
         return self.scheduler().gather(*handles)
 
-    def run(self, query, priority: int = 0) -> Dict[str, np.ndarray]:
+    def run(self, query, priority: int = 0,
+            options: Optional[ExecutionOptions] = None
+            ) -> Dict[str, np.ndarray]:
         """Synchronous scheduled execution: ``submit`` + ``result``.
 
         Unlike ``execute``, this path gets admission control and the
         plan/result caches — repeated identical queries are served from
-        cache until a referenced table is re-registered.
+        cache until a referenced table is re-registered. ``options``
+        applies per-query ``ExecutionOptions`` overrides.
         """
-        return self.submit(query, priority=priority).result()
+        return self.submit(query, priority=priority,
+                           options=options).result()
 
     def executor_stats(self) -> Dict[str, object]:
         """Stats from the most recent ``execute`` (scan + operator timings)."""
@@ -348,6 +411,31 @@ class Session:
         through the logical optimizer and this session's driver."""
         from .builder import QueryBuilder
         return QueryBuilder.scan(self.catalog, name, columns, session=self)
+
+    def sql(self, text: str, options: Optional[ExecutionOptions] = None,
+            dialect: Optional[str] = None):
+        """Parse SQL text into a session-bound ``QueryBuilder``.
+
+        The returned builder is indistinguishable from a hand-built one —
+        ``.collect()``, ``.submit()``, ``.explain(analyze=True)`` all work,
+        and the optimizer/scheduler treat it identically (the SQL text
+        additionally prefixes the scheduler's plan/result cache keys)::
+
+            out = session.sql(
+                "SELECT l_returnflag, count(*) AS n FROM lineitem "
+                "GROUP BY l_returnflag ORDER BY l_returnflag").collect()
+
+        Unsupported constructs raise ``SqlUnsupportedError`` naming the
+        offending node; syntax errors raise ``SqlParseError``; unknown
+        tables/columns raise ``SchemaError``. ``dialect`` transpiles
+        foreign dialects via the optional ``sqlglot`` dependency (the
+        ``[sql]`` extra). ``options`` attaches per-query
+        ``ExecutionOptions`` that ``collect``/``submit`` pick up.
+        """
+        from .sql import lower_sql
+        qb = lower_sql(text, self.catalog, session=self, dialect=dialect)
+        qb._options = options
+        return qb
 
     def optimizer_config(self):
         """This session's ``OptimizerConfig`` (worker count threaded in so
@@ -366,6 +454,11 @@ class Session:
 
     def explain(self, plan: PlanNode, analyze: bool = False) -> str:
         """Pretty-print a plan before and after optimization.
+
+        .. deprecated::
+            Prefer ``QueryBuilder.explain(analyze=...)`` — builder and SQL
+            queries share that one explain surface and delegate here. This
+            plan-first form is kept for callers holding a bare ``PlanNode``.
 
         With ``analyze=True`` the (optimized) plan is also executed and the
         executor's per-table scan stats -- bytes read, bytes transferred,
