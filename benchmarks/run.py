@@ -19,11 +19,11 @@ def main(argv=None) -> None:
                         help="substring filter on suite names")
     args = parser.parse_args(argv)
 
-    from . import (bench_barebones, bench_cold_hot, bench_concurrency,
-                   bench_cost_perf, bench_exchange, bench_kernels,
-                   bench_outofcore, bench_q5_scaling, bench_scaleup,
-                   bench_scan_pipeline, bench_sql, bench_storage_format,
-                   bench_weak_scaling)
+    from . import (bench_adaptive, bench_barebones, bench_cold_hot,
+                   bench_concurrency, bench_cost_perf, bench_exchange,
+                   bench_kernels, bench_outofcore, bench_q5_scaling,
+                   bench_scaleup, bench_scan_pipeline, bench_sql,
+                   bench_storage_format, bench_weak_scaling)
 
     suites = [
         ("storage_format(§2.2)", bench_storage_format.run),
@@ -40,6 +40,7 @@ def main(argv=None) -> None:
         ("cold_hot(Table3)", bench_cold_hot.run),
         ("cost_perf(Fig9)", bench_cost_perf.run),
         ("outofcore(spill)", bench_outofcore.run),
+        ("adaptive(feedback)", bench_adaptive.run),
     ]
     if args.only:
         suites = [(n, fn) for n, fn in suites if args.only in n]

@@ -68,6 +68,12 @@ class ExecutionContext:
     # grace-partitioned, aggregations flush accumulator runs to the host
     # tier, and oversized exchange send buffers stage through the store.
     spill: Optional[object] = None
+    # runtime-feedback store (core.feedback.FeedbackStore). Set, the driver
+    # counts each plan node's observed output cardinality while streaming
+    # and harvests the counts (plus join build-key multiplicities and
+    # zone-map skip fractions) into the store after the query completes,
+    # so the next optimization of the same plan shape re-plans warm.
+    feedback: Optional[object] = None
 
     def __post_init__(self):
         if self.exchange is None:
@@ -141,6 +147,28 @@ class StreamingScan:
         yield from outs
 
 
+def empty_executor_stats() -> Dict[str, object]:
+    """The executor-stats dict shape before any query has run.
+
+    ``Session.executor_stats()`` (no query yet) and
+    ``QueryHandle.executor_stats`` (not yet executed) both return this, so
+    callers can read ``stats['kernel_dispatch']`` etc. without guarding on
+    which serving path produced the dict or whether anything ran.
+    """
+    return {
+        "tables": {},
+        "op_seconds": {},
+        "conversions": {},
+        "exchange_protocol": "",
+        "exchanges": {},
+        "kernel_backend": "",
+        "kernel_dispatch": {},
+        "spill": {},
+        "spill_staged_exchanges": 0,
+        "feedback": {},
+    }
+
+
 class Driver:
     """Executes one logical plan as streaming operator pipelines.
 
@@ -166,11 +194,18 @@ class Driver:
         # exchanges whose send buffer was staged through the spill store
         self.spill_staged_exchanges = 0
         self._spill_seq = 0
+        # runtime-feedback observation state: per-node valid-row counters
+        # filled by the counting generators `_observe` wraps streams in,
+        # plus exact-key build multiplicities sampled in `_exec_join`
+        self._feedback_obs: list = []
+        self._feedback_matches: Dict[int, int] = {}
 
     def executor_stats(self) -> Dict[str, object]:
         """Per-query executor stats: scan counters, operator timings,
         kernel backend + dispatch counts, per-fragment exchange counters
-        (rows/bytes moved, host staging), and per-tier spill counters."""
+        (rows/bytes moved, host staging), per-tier spill counters, and the
+        feedback-store summary. Same key shape as
+        ``empty_executor_stats()``."""
         return {
             "tables": {t: s.summary() for t, s in self.scan_stats.items()},
             "op_seconds": dict(self.op_seconds),
@@ -182,6 +217,8 @@ class Driver:
             "spill": (self.ctx.spill.stats.summary()
                       if self.ctx.spill is not None else {}),
             "spill_staged_exchanges": self.spill_staged_exchanges,
+            "feedback": (self.ctx.feedback.summary()
+                         if self.ctx.feedback is not None else {}),
         }
 
     def _kernel_scope(self):
@@ -198,7 +235,9 @@ class Driver:
         try:
             with self._kernel_scope():
                 stream = self._stream(node)
-                return self._materialize(stream)
+                table = self._materialize(stream)
+            self._harvest_feedback()
+            return table
         finally:
             self._close_spill()
 
@@ -209,7 +248,9 @@ class Driver:
             with self._kernel_scope():
                 stream = self._stream(node)
                 table = self._materialize_table(stream.batches)
-            return self._collect_host(stream, table)
+            out = self._collect_host(stream, table)
+            self._harvest_feedback()
+            return out
         finally:
             self._close_spill()
 
@@ -330,7 +371,77 @@ class Driver:
     # -- recursive plan execution ----------------------------------------------
     def _stream(self, node: P.PlanNode) -> Stream:
         method = getattr(self, f"_exec_{type(node).__name__.lower()}")
-        return method(node)
+        stream = method(node)
+        if (self.ctx.feedback is None
+                or isinstance(node, (P.Repartition, P.Broadcast, P.Exchange))):
+            # exchange nodes are keyed through (plan.feedback_key looks at
+            # their child), so counting them would double-observe the child
+            return stream
+        return self._observe(node, stream)
+
+    def _observe(self, node: P.PlanNode, stream: Stream) -> Stream:
+        """Wrap a stage output in a valid-row counting generator; counts
+        are harvested into the feedback store after the query completes.
+        Scans with fused Filter/Project stages count post-fusion rows (an
+        under-count of the raw scan — safe, scan rows only feed memory
+        pricing, never a correctness-critical capacity)."""
+        box = {"rows": 0}
+
+        def counted(src):
+            for batch in src:
+                box["rows"] += int(batch.num_valid())
+                yield batch
+
+        self._feedback_obs.append((node, box, stream.dist))
+        return Stream(counted(stream.batches), stream.dist, scan=stream.scan)
+
+    def _observe_join_build(self, node: P.Join, build: DeviceTable,
+                            dist: str) -> None:
+        """Record the exact-key build multiplicity for a join: the maximum
+        number of valid build rows sharing one key value, which bounds
+        matches per probe row. Only sampled for single int-like keys —
+        equality there is exact (no hash collisions), so the bound is
+        sound as a warm ``max_matches``; hashed composite keys are never
+        tightened."""
+        kt = [build.schema[k] for k in node.build_keys]
+        if len(kt) != 1 or kt[0].name not in ("int32", "date32", "dict32"):
+            return
+        keys = np.asarray(build.columns[node.build_keys[0]])
+        valid = np.asarray(build.validity)
+        if dist == "replicated" and self._w > 1:
+            keys, valid = keys[0], valid[0]     # identical worker replicas
+        vals = keys[valid]
+        m = 1 if vals.size == 0 else int(
+            np.max(np.unique(vals, return_counts=True)[1]))
+        self._feedback_matches[id(node)] = m
+
+    def _harvest_feedback(self) -> None:
+        """Flush the per-node observations into the feedback store (called
+        once, after the result materialized — both the direct-session and
+        the scheduler path run through here)."""
+        fb = self.ctx.feedback
+        if fb is None or not self._feedback_obs:
+            return
+        from .optimizer import row_bound
+        for node, box, dist in self._feedback_obs:
+            rows = box["rows"]
+            if dist == "replicated" and self._w > 1:
+                rows //= self._w                # identical worker replicas
+            try:
+                est = row_bound(node, self.ctx.catalog)
+            except Exception:
+                est = None                      # exchange-wrapped subtree
+            skip = None
+            if isinstance(node, P.TableScan):
+                stats = self.scan_stats.get(node.table)
+                if stats is not None and stats.chunks_total:
+                    skip = stats.chunks_skipped / stats.chunks_total
+            fb.record(fb.key_for(node, self.ctx.catalog, self._w), rows,
+                      estimated=est,
+                      max_matches=self._feedback_matches.get(id(node)),
+                      skip_fraction=skip)
+        self._feedback_obs = []
+        self._feedback_matches = {}
 
     def _place(self, batches: Iterator[DeviceTable]) -> Iterator[DeviceTable]:
         """Pin scan output to the worker mesh axis (one shard per worker,
@@ -479,6 +590,8 @@ class Driver:
     def _exec_join(self, node: P.Join) -> Stream:
         build_stream = self._stream(node.build)
         build = self._materialize(build_stream)
+        if self.ctx.feedback is not None:
+            self._observe_join_build(node, build, build_stream.dist)
 
         probe_stream = self._stream(node.probe)
         dist = probe_stream.dist

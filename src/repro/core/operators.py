@@ -38,6 +38,23 @@ from .expr import Expr
 from .table import DeviceTable, concat_tables
 
 
+# every table_op's compile cache, so long-lived processes (full-suite
+# test sweeps, benchmark harnesses) can release accumulated executables
+_OP_CACHES: list = []
+
+
+def clear_compile_caches() -> None:
+    """Drop every ``table_op`` compiled-program cache.
+
+    The caches are unbounded by design (steady-state serving re-uses a
+    small working set), but a process that runs many differently-shaped
+    workloads back to back — e.g. a full TPC-H sweep at several scale
+    factors — accumulates thousands of live XLA executables. Pair with
+    ``jax.clear_caches()`` to actually release them."""
+    for cache in _OP_CACHES:
+        cache.cache_clear()
+
+
 def table_op(n_tables: int = 1):
     """Wrap fn(*tables, *statics) with jit + optional worker-axis vmap.
 
@@ -59,6 +76,8 @@ def table_op(n_tables: int = 1):
             body = lambda *tabs: fn(*tabs, *statics)
             used: set = set()
             return jax.jit(jax.vmap(body) if stacked else body), used
+
+        _OP_CACHES.append(compiled)
 
         @functools.wraps(fn)
         def wrapper(*args):
@@ -612,9 +631,15 @@ class HashJoin(Operator):
         eligible = (self._exact
                     and (self.join_type in ("left_semi", "left_anti")
                          or self.max_matches == 1))
-        if (kernel_ops.current_backend() == "pallas" and eligible
-                and self._try_pallas_build(build)):
-            return
+        if kernel_ops.current_backend() == "pallas":
+            if eligible and self._try_pallas_build(build):
+                return
+            # probe wanted the hash_probe kernel but couldn't take it
+            # (expansion join, composite key, sentinel-colliding key, or a
+            # build_rows bound past the table's slot budget). Counted once
+            # per sealed build so the adaptive suite can assert warm
+            # re-plans with tighter bounds shrink it.
+            kernel_ops.count_dispatch("fallback_probe")
         bt = _build_join_table(build, self.build_keys)
         self._state = (build, bt)
 

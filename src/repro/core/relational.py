@@ -210,6 +210,15 @@ def segment_agg(values: jax.Array, gids: jax.Array, order: jax.Array,
             return jnp.round(out).astype(jnp.int32)
         return out.astype(v.dtype)
 
+    if kernel_ops.current_backend() == "pallas" and v.ndim == 1 and (
+            (kind == "sum" and jnp.issubdtype(v.dtype, jnp.floating)
+             and v.dtype.itemsize <= 4) or kind == "count"):
+        # eligible shape/kind, blocked only by capacity: the static
+        # max_groups bound (or a >2^24-row count) pushed an otherwise
+        # kernel-servable aggregation onto the jnp path. Recorded per
+        # dispatch so adaptive re-planning can prove it shrank the count.
+        kernel_ops.mark_fallback("agg")
+
     n = max_groups + 1
     if kind == "count":
         out = jax.ops.segment_sum(valid_sorted.astype(jnp.int32), seg, n,

@@ -60,8 +60,9 @@ from typing import Dict, List, Optional, Tuple
 
 from ..kernels import ops as kernel_ops
 from . import plan as P
-from .driver import Driver
-from .optimizer import estimate_memory_breakdown, optimize
+from .driver import Driver, empty_executor_stats
+from .feedback import qerror
+from .optimizer import estimate_memory_breakdown, feedback_estimates, optimize
 
 
 class QueryRejected(RuntimeError):
@@ -99,6 +100,13 @@ class SchedulerConfig:
     spill_host_budget: int = 1 << 31
     spill_disk_ceiling: int = 1 << 38
     spill_dir: Optional[str] = None
+    # adaptive re-planning: a cached plan whose believed cardinalities
+    # (static bounds, or the feedback observations it was planned from)
+    # miss the fresh post-execution observations by more than this q-error
+    # is evicted from the plan cache, so the next identical submit
+    # re-optimizes against the updated feedback store. Feedback-planned
+    # entries converge (estimate == observation) and stay cached.
+    feedback_qerror_limit: float = 4.0
 
 
 class QueryHandle:
@@ -133,10 +141,20 @@ class QueryHandle:
         self.num_workers: int = 1
         self._queue_skips = 0          # times passed over by backfilling
         self._versions: tuple = ()     # admission-time catalog snapshot
+        # adaptive execution: the feedback store resolved at submit time,
+        # the plan-cache key of the optimized entry, and the cardinalities
+        # the plan was optimized under (store key -> believed rows) — the
+        # post-execution q-error check compares these against the fresh
+        # observations and evicts the cached plan when they drifted
+        self._feedback = None
+        self._plan_key: str = ""
+        self._est_map: Dict[str, int] = {}
         self.submitted_at = time.perf_counter()
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
-        self.executor_stats: Dict[str, object] = {}
+        # same key shape as driver.empty_executor_stats() until the query
+        # runs, so callers can index the dict without a done() check
+        self.executor_stats: Dict[str, object] = empty_executor_stats()
         self._done = threading.Event()
         self._result: Optional[Dict] = None
         self._error: Optional[BaseException] = None
@@ -212,6 +230,11 @@ class _VersionedLRU:
             while len(self._od) > self.capacity:
                 self._od.popitem(last=False)
 
+    def invalidate(self, key: str) -> None:
+        """Drop ``key`` if present (the adaptive q-error eviction path)."""
+        with self._lock:
+            self._od.pop(key, None)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._od)
@@ -279,7 +302,8 @@ class QueryScheduler:
                sql: Optional[str] = None,
                num_workers: Optional[int] = None,
                kernel_backend: Optional[str] = None,
-               optimize: Optional[bool] = None) -> QueryHandle:
+               optimize: Optional[bool] = None,
+               feedback: Optional[object] = None) -> QueryHandle:
         """Admit ``plan`` for execution; returns a ``QueryHandle``.
 
         Raises ``QueryRejected`` when the query could never fit the memory
@@ -308,6 +332,19 @@ class QueryScheduler:
                    or kernel_ops.current_backend())
         w = num_workers if num_workers is not None \
             else self.session.num_workers
+        # adaptive execution: resolve the feedback store once, here, and
+        # pin it on the handle (the per-query override, else the session's
+        # store). True means an ephemeral per-query store; False disables
+        # the session store for this query.
+        if feedback is None:
+            fb = self.session.feedback_store()
+        elif feedback is True:
+            from .feedback import FeedbackStore
+            fb = FeedbackStore()
+        elif feedback is False:
+            fb = None
+        else:
+            fb = feedback
         # SQL-born queries prefix their cache keys with the text's hash:
         # two different SQL texts that happen to lower to the same logical
         # plan still share nothing, so a frontend fix that changes the
@@ -317,7 +354,11 @@ class QueryScheduler:
         if sql is not None:
             digest = hashlib.sha1(sql.encode("utf-8")).hexdigest()[:16]
             sql_prefix = f"sql={digest}:"
-        key = f"{sql_prefix}w{w}:k={backend}:{P.fingerprint(plan)}"
+        # the feedback flag is part of the key: a warm (feedback-planned)
+        # tree and the static plan of the same query differ, so neither
+        # cache may serve one where the other was requested
+        key = (f"{sql_prefix}w{w}:k={backend}:fb{int(fb is not None)}:"
+               f"{P.fingerprint(plan)}")
         # result cache first: a hit skips optimization entirely
         cached = self.result_cache.get(key, self.session.catalog)
         if cached is not None:
@@ -332,15 +373,16 @@ class QueryScheduler:
             return handle
 
         if optimize is False:
-            optimized, plan_hit = plan, False
+            optimized, est_map, plan_hit = plan, {}, False
         else:
-            optimized, plan_hit = self._optimized(plan, key, w)
+            optimized, est_map, plan_hit = self._optimized(plan, key, w, fb)
         try:
             breakdown = estimate_memory_breakdown(
                 optimized, self.session.catalog,
                 num_workers=w,
                 batch_rows=self.session.batch_rows,
-                prefetch_depth=self.session.prefetch_depth)
+                prefetch_depth=self.session.prefetch_depth,
+                feedback=fb)
             est = breakdown.total
         except TypeError:
             if optimize is not False:
@@ -358,6 +400,9 @@ class QueryScheduler:
         handle.plan_cache_hit = plan_hit
         handle.kernel_backend = backend
         handle.num_workers = w
+        handle._feedback = fb
+        handle._plan_key = "opt:" + key
+        handle._est_map = est_map
         # version snapshot taken NOW: if a table is re-registered while the
         # query runs, the snapshot no longer matches at the next lookup and
         # the (stale) result is never served from cache
@@ -460,23 +505,31 @@ class QueryScheduler:
                 t.join(timeout=30.0)
 
     # -- internals ----------------------------------------------------------
-    def _optimized(self, plan: P.PlanNode, raw_key: str,
-                   w: int) -> Tuple[P.PlanNode, bool]:
+    def _optimized(self, plan: P.PlanNode, raw_key: str, w: int,
+                   fb: Optional[object]
+                   ) -> Tuple[P.PlanNode, Dict[str, int], bool]:
         """Optimized plan via the plan cache. ``raw_key`` already carries
         the SQL-text prefix (when the query came from ``Session.sql``), the
         planned worker count (exchange placement makes the physical plan
-        W-dependent), the backend, and the raw tree's fingerprint. Versions
-        are snapshot *before* optimization, which reads catalog stats."""
+        W-dependent), the backend, the feedback flag, and the raw tree's
+        fingerprint. Versions are snapshot *before* optimization, which
+        reads catalog stats. Entries store ``(optimized, est_map)`` where
+        ``est_map`` is the per-node cardinality belief the plan was
+        derived under (``optimizer.feedback_estimates``); the q-error
+        check after execution compares it against fresh observations."""
         key = "opt:" + raw_key
         cached = self.plan_cache.get(key, self.session.catalog)
         if cached is not None:
-            return cached, True
+            optimized, est_map = cached
+            return optimized, est_map, True
         versions = self.session.catalog.versions(referenced_tables(plan))
         config = dataclasses.replace(self.session.optimizer_config(),
-                                     num_workers=w)
+                                     num_workers=w, feedback=fb)
         optimized = optimize(plan, self.session.catalog, config=config)
-        self.plan_cache.put(key, versions, optimized)
-        return optimized, False
+        est_map = (feedback_estimates(optimized, self.session.catalog, config)
+                   if fb is not None else {})
+        self.plan_cache.put(key, versions, (optimized, est_map))
+        return optimized, est_map, False
 
     def _ensure_workers(self) -> None:
         """Lazily grow the worker pool up to ``max_concurrency`` (held lock)."""
@@ -554,7 +607,8 @@ class QueryScheduler:
             # computed from it; the worker thread's ambient default may
             # differ by now)
             ctx = dataclasses.replace(
-                ctx, kernel_backend=handle.kernel_backend)
+                ctx, kernel_backend=handle.kernel_backend,
+                feedback=handle._feedback)
             if self.session.exchange is not None:
                 # don't share one protocol's mutable stats across
                 # concurrent queries: each Driver gets a fresh clone
@@ -573,6 +627,7 @@ class QueryScheduler:
             driver = Driver(ctx)
             result = driver.collect(handle.plan)
             handle.executor_stats = driver.executor_stats()
+            self._check_feedback(handle)
             self.result_cache.put(handle._result_key, handle._versions,
                                   result)
             handle._complete(result=result)
@@ -582,3 +637,23 @@ class QueryScheduler:
             handle._complete(error=exc)
             with self._cond:
                 self.failed += 1
+
+    def _check_feedback(self, handle: QueryHandle) -> None:
+        """Adaptive plan-cache invalidation: after a feedback-enabled
+        query runs, compare the cardinalities its cached plan was derived
+        under (``handle._est_map``) against the observations the driver
+        just harvested. A q-error past ``feedback_qerror_limit`` on any
+        node means the plan's capacities/ordering were priced from stale
+        beliefs — evict the entry so the next identical submit re-plans
+        from the updated store. Warm (feedback-planned) entries have
+        estimate == observation and survive, so the loop converges."""
+        fb = handle._feedback
+        if fb is None or not handle._est_map:
+            return
+        worst = 1.0
+        for key, est in handle._est_map.items():
+            entry = fb.get(key)
+            if entry is not None:
+                worst = max(worst, qerror(est, entry.rows))
+        if worst > self.config.feedback_qerror_limit:
+            self.plan_cache.invalidate(handle._plan_key)

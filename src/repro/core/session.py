@@ -15,7 +15,7 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from .driver import Driver, ExecutionContext
+from .driver import Driver, ExecutionContext, empty_executor_stats
 from .exchange import ExchangeProtocol, ICIExchange
 from .plan import PlanNode
 from .streaming import HostMorsel, MorselPrefetcher, ScanStats, morsel_to_device
@@ -212,6 +212,10 @@ class ExecutionOptions:
     kernel_backend: Optional[str] = None
     # run the logical optimizer before execution (default True)
     optimize: Optional[bool] = None
+    # runtime-feedback override for this query only: ``True`` enables an
+    # ephemeral ``core.feedback.FeedbackStore``, ``False`` disables the
+    # session's store, or pass a ``FeedbackStore`` to share across queries
+    feedback: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -277,6 +281,27 @@ class Session:
     # scheduler knobs (core.scheduler.SchedulerConfig); None = defaults.
     # Assign before the first submit()/run() — the scheduler is built lazily.
     scheduler_config: Optional[object] = None
+    # adaptive execution (core.feedback): ``True`` gives the session a
+    # ``FeedbackStore`` recording observed per-node cardinalities after
+    # every query; the optimizer then re-plans warm runs from those
+    # observations (tighter kernel capacities, feedback-driven build-side
+    # selection) and the scheduler invalidates cached plans whose
+    # estimates drifted. Pass an existing ``FeedbackStore`` to share one
+    # across sessions; ``None`` disables adaptivity entirely.
+    feedback: Optional[object] = None
+
+    def feedback_store(self):
+        """The session's ``core.feedback.FeedbackStore``, or ``None`` when
+        adaptivity is off. Normalizes ``feedback=True`` into a concrete
+        store on first use (thread-safe; all later calls share it)."""
+        fb = self.feedback
+        if fb is True:
+            with Session._scheduler_lock:
+                if self.feedback is True:
+                    from .feedback import FeedbackStore
+                    self.feedback = FeedbackStore()
+                fb = self.feedback
+        return fb if fb is not None and fb is not False else None
 
     def context(self) -> ExecutionContext:
         """Snapshot this session's execution config for one Driver run
@@ -298,6 +323,7 @@ class Session:
             prefetch_depth=self.prefetch_depth,
             kernel_backend=self.kernel_backend,
             spill=spill,
+            feedback=self.feedback_store(),
         )
 
     def _with_options(self, options: Optional[ExecutionOptions]) -> "Session":
@@ -309,6 +335,8 @@ class Session:
             repl["num_workers"] = options.num_workers
         if options.kernel_backend is not None:
             repl["kernel_backend"] = options.kernel_backend
+        if options.feedback is not None:
+            repl["feedback"] = options.feedback
         return dataclasses.replace(self, **repl) if repl else self
 
     def execute(self, plan: PlanNode,
@@ -381,7 +409,8 @@ class Session:
             plan, priority=priority, sql=sql,
             num_workers=opts.num_workers,
             kernel_backend=opts.kernel_backend,
-            optimize=opts.optimize)
+            optimize=opts.optimize,
+            feedback=opts.feedback)
 
     def gather(self, *handles) -> list:
         """Wait for ``submit`` handles; results in argument order."""
@@ -401,9 +430,22 @@ class Session:
                            options=options).result()
 
     def executor_stats(self) -> Dict[str, object]:
-        """Stats from the most recent ``execute`` (scan + operator timings)."""
+        """Stats from the most recent ``execute`` (scan + operator timings).
+
+        Before any query has run this returns the same *shape* a Driver
+        reports — every key present, empty values — so callers can index
+        ``stats['kernel_dispatch']``/``stats['feedback']`` unconditionally
+        on both the direct and the scheduler path. The ``feedback`` entry
+        always reflects the session's live store (it accumulates across
+        queries, unlike the per-query driver stats).
+        """
         driver = getattr(self, "last_driver", None)
-        return driver.executor_stats() if driver is not None else {}
+        stats = (driver.executor_stats() if driver is not None
+                 else empty_executor_stats())
+        fb = self.feedback_store()
+        if fb is not None:
+            stats["feedback"] = fb.summary()
+        return stats
 
     # -- fluent frontend + optimizer entry points ---------------------------
     def table(self, name: str, columns=None):
@@ -442,7 +484,8 @@ class Session:
         exchange placement plans for the session's cluster size)."""
         from .optimizer import DEFAULT_CONFIG
         return dataclasses.replace(DEFAULT_CONFIG,
-                                   num_workers=self.num_workers)
+                                   num_workers=self.num_workers,
+                                   feedback=self.feedback_store())
 
     def optimize(self, plan: PlanNode) -> PlanNode:
         """Run the rule-based logical optimizer over a plan tree. With

@@ -166,6 +166,16 @@ def _mark(kind: str) -> None:
             used.add(kind)
 
 
+def mark_fallback(kind: str) -> None:
+    """Trace-time note that a hot path wanted the pallas kernel for
+    ``kind`` but took its jnp fallback (oversized capacity, composite key,
+    unsupported accumulator...). Recorded as ``fallback_<kind>`` alongside
+    the kernel kinds, so ``executor_stats()['kernel_dispatch']`` counts one
+    fallback per would-be dispatch — the number adaptive re-planning tries
+    to drive down."""
+    _mark("fallback_" + kind)
+
+
 # ---------------------------------------------------------------------------
 # kernel wrappers (interpret mode off-TPU)
 # ---------------------------------------------------------------------------

@@ -86,7 +86,9 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         compile_s = time.time() - t0
 
-    cost = compiled.cost_analysis() or {}
+    cost = compiled.cost_analysis()
+    # older jaxlibs return a one-element list of per-module dicts
+    cost = cost[0] if isinstance(cost, (list, tuple)) else (cost or {})
     flops = float(cost.get("flops", 0.0))
     bytes_accessed = float(cost.get("bytes accessed", 0.0))
     try:

@@ -65,7 +65,9 @@ def allreduce_compressed(grads, error, axis_names):
             smax = jax.lax.pmax(smax, ax)
         n = 1
         for ax in axis_names:
-            n *= jax.lax.axis_size(ax)
+            # jax.lax.axis_size only exists on newer jaxlibs; psum of a
+            # unit is the portable spelling of the axis size
+            n *= jax.lax.psum(1, ax)
         return dequantize(total, smax) / n
 
     out = jax.tree.map(reduce_one, q, s)

@@ -35,8 +35,10 @@ def test_scan_body_weighted_by_trip_count():
 
     # and confirm cost_analysis alone UNDER-counts the scan (the bug the
     # parser exists to fix)
-    ca = jax.jit(scanned).lower(x, ws).compile().cost_analysis()["flops"]
-    assert ca < analytic / 2
+    ca = jax.jit(scanned).lower(x, ws).compile().cost_analysis()
+    # older jaxlibs return a one-element list of per-module dicts
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert ca["flops"] < analytic / 2
 
 
 def test_nested_scan_weighting():

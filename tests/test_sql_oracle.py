@@ -114,7 +114,14 @@ def test_tpch_sql_vs_duckdb(qnum, mode, sessions, catalog, duck):
 # ---------------------------------------------------------------------------
 
 def test_fuzz_vs_duckdb(sessions, catalog, duck):
+    """Each fuzzed query runs three times: once on the plain streaming
+    session, then twice on a session sharing one adaptive feedback store
+    — the cold run seeds observed cardinalities, the warm run re-plans
+    from them (tighter capacities, feedback-driven join sides), and both
+    are checksum-diffed against DuckDB. Plan shapes TPC-H never exercises
+    are exactly where an unsound warm bound would silently drop rows."""
     queries = fuzz_queries(SEED, FUZZ_N, catalog)
+    adaptive = Session(catalog, batch_rows=16384, feedback=True)
     failures, skipped, checked = [], 0, 0
     for i, sql in enumerate(queries):
         ref = run_duckdb(duck, sql)
@@ -128,6 +135,10 @@ def test_fuzz_vs_duckdb(sessions, catalog, duck):
             from sql_oracle import diff_results
             sums = diff_results(qb.collect(), ref, qb.schema, sql=sql)
             _checksums["streaming"][f"fuzz{i:03d}"] = sums
+            for run in ("cold", "warm"):
+                aqb = adaptive.sql(sql)
+                diff_results(aqb.collect(), ref, aqb.schema,
+                             sql=f"[feedback {run}] {sql}")
             checked += 1
         except SqlMismatch as exc:
             failures.append(str(exc))
@@ -137,6 +148,8 @@ def test_fuzz_vs_duckdb(sessions, catalog, duck):
     # the sweep must actually exercise the engine, not skip its way green
     assert checked >= max(1, FUZZ_N // 2), \
         f"only {checked}/{FUZZ_N} fuzzed queries were comparable"
+    # the adaptive pass must have fed the planner real observations
+    assert adaptive.executor_stats()["feedback"]["entries"] > 0
 
 
 def test_duckdb_available_reporting():
