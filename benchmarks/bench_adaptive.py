@@ -36,14 +36,8 @@ def _fallbacks(stats) -> int:
 
 
 def _roofline_fraction(num_rows: int, num_groups: int) -> dict:
-    """Achieved roofline fraction for the warm-shape segmented sum.
-
-    Lowers ``kernels.ops.segmented_sum`` at the given shape, takes
-    FLOPs/bytes from the compiled cost analysis and collective bytes from
-    the HLO text, and compares the roofline time bound (max term) to the
-    measured per-call time.
-    """
-    import jax
+    """Achieved roofline fraction for the warm-shape segmented sum,
+    via the shared ``launch.roofline.measure_program`` report."""
     import jax.numpy as jnp
 
     from repro.kernels import ops as kernel_ops
@@ -51,28 +45,10 @@ def _roofline_fraction(num_rows: int, num_groups: int) -> dict:
 
     gids = jnp.arange(num_rows, dtype=jnp.int32) % max(num_groups, 1)
     vals = jnp.ones((num_rows,), dtype=jnp.float32)
-    fn = jax.jit(lambda g, v: kernel_ops.segmented_sum(g, v, num_groups))
-    lowered = fn.lower(gids, vals)
-    compiled = lowered.compile()
-    cost = compiled.cost_analysis()
-    cost = cost[0] if isinstance(cost, (list, tuple)) else (cost or {})
-    flops = float(cost.get("flops", 0.0))
-    bytes_accessed = float(cost.get("bytes accessed", 0.0))
-    coll = sum(roofline.collective_bytes(compiled.as_text()).values())
-    terms = roofline.roofline_terms(flops, bytes_accessed, coll, chips=1)
-    bound_s = max(terms.values())
-    measured_s = timeit(
-        lambda: jax.block_until_ready(fn(gids, vals)), warmup=1, iters=3)
-    return {
-        "rows": num_rows,
-        "groups": num_groups,
-        "flops": flops,
-        "bytes_accessed": bytes_accessed,
-        "roofline_bound_s": bound_s,
-        "measured_s": measured_s,
-        "dominant": roofline.dominant(terms),
-        "achieved_fraction": bound_s / measured_s if measured_s else 0.0,
-    }
+    report = roofline.measure_program(
+        lambda g, v: kernel_ops.segmented_sum(g, v, num_groups),
+        gids, vals)
+    return {"rows": num_rows, "groups": num_groups, **report}
 
 
 def run(sf: float = 0.02) -> None:

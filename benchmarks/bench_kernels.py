@@ -5,8 +5,10 @@ dispatches through ``kernels.ops`` — segmented aggregation (MXU
 scatter-add vs ``jax.ops.segment_sum``), exchange histogram (radix vs
 one-hot sum), stream-compaction addresses (two-level scan vs stable
 argsort), and hash-table build + probe (open addressing vs
-sort + searchsorted) — plus a Q1-shaped end-to-end run of both Session
-backends with their ``kernel_dispatch`` counts.
+sort + searchsorted) — plus per-kernel achieved roofline fractions
+(``launch.roofline.measure_program``), a Q6-shaped fused-vs-per-primitive
+morsel scan, and a Q1/Q3 end-to-end run of both Session backends with
+their ``kernel_dispatch`` counts.
 
 Off-TPU the pallas numbers are *interpret mode* (the kernel body executed
 as plain XLA ops): they validate the dispatch boundary and give a shape of
@@ -101,6 +103,109 @@ def bench_primitives(detail: dict) -> None:
     detail["hash_probe"] = {"jnp_s": t_jnp_probe, "pallas_s": t_pal_probe}
 
 
+def bench_roofline(detail: dict) -> None:
+    """Achieved roofline fraction per kernel (``launch.roofline``).
+
+    Each wrapper is lowered at the bench shape; FLOPs/bytes come from the
+    compiled cost analysis, the bound from the TPU v5e peak terms. Off-TPU
+    the absolute fractions are interpret-mode noise — the artifact exists
+    so the TPU run of the same job shows each kernel's distance from the
+    §3.2 ceiling, and the CPU run keeps the plumbing tested."""
+    from repro.launch import roofline
+
+    rng = np.random.default_rng(0)
+    gids = jnp.asarray(rng.integers(0, N_GROUPS, N_ROWS), jnp.int32)
+    vals = jnp.asarray(rng.normal(0, 1, N_ROWS), jnp.float32)
+    ivals = jnp.asarray(rng.integers(0, 100, N_ROWS), jnp.int32)
+    pids = jnp.asarray(rng.integers(0, N_PARTS, N_ROWS), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, N_ROWS).astype(bool))
+    keys = jnp.asarray(rng.choice(10**7, N_BUILD, replace=False), jnp.int32)
+    rows = jnp.arange(N_BUILD, dtype=jnp.int32)
+    probes = jnp.asarray(rng.integers(0, 10**7, N_ROWS), jnp.int32)
+    tk, tv = kernel_ops.build_table(keys, rows, TABLE)
+
+    programs = {
+        "segmented_sum": (
+            lambda g, v: kernel_ops.segmented_sum(g, v, N_GROUPS),
+            (gids, vals)),
+        "segmented_int_sum": (
+            lambda g, v: kernel_ops.segmented_int_sum(g, v, N_GROUPS),
+            (gids, ivals)),
+        "segmented_minmax": (
+            lambda g, v: kernel_ops.segmented_minmax(g, v, N_GROUPS, "max"),
+            (gids, vals)),
+        "radix_histogram": (
+            lambda p: kernel_ops.radix_histogram(p, N_PARTS), (pids,)),
+        "block_prefix_sum": (kernel_ops.block_prefix_sum, (mask,)),
+        "build_table": (
+            lambda k, r: kernel_ops.build_table(k, r, TABLE), (keys, rows)),
+        "hash_probe": (
+            lambda a, b, p: kernel_ops.hash_probe(a, b, p, max_probes=64),
+            (tk, tv, probes)),
+        "hash_probe_multi": (
+            lambda a, b, p: kernel_ops.hash_probe_multi(a, b, p, 4,
+                                                        max_probes=64),
+            (tk, tv, probes)),
+    }
+    reports = {}
+    for name, (fn, args) in programs.items():
+        rep = roofline.measure_program(fn, *args)
+        reports[name] = rep
+        emit(f"kernels_roofline_{name}", rep["measured_s"],
+             derived=(f"roofline={rep['achieved_fraction']:.4f}"
+                      f"_{rep['dominant']}"))
+    detail["roofline"] = reports
+
+
+def bench_fused_scan(detail: dict) -> None:
+    """Q6-shaped scan morsel: filter (shipdate window, discount window,
+    quantity cap) then project revenue. 'fused' runs the whole chain as
+    one per-morsel pallas kernel (``core.fused``); 'per_primitive' is the
+    dispatch baseline — the same stages launched as one kernel each, the
+    way the unfused pipeline executes the morsel. The delta is the launch
+    + HBM-round-trip overhead the fused path exists to remove."""
+    from repro.core import dtypes as dt
+    from repro.core import fused
+    from repro.core.expr import col
+    from repro.core.table import DeviceTable
+    from repro.launch import roofline
+
+    rng = np.random.default_rng(1)
+    n = N_ROWS
+    table = DeviceTable.from_numpy(
+        {"l_shipdate": rng.integers(8700, 9200, n).astype(np.int32),
+         "l_discount": rng.uniform(0.0, 0.1, n).astype(np.float32),
+         "l_quantity": rng.uniform(1.0, 50.0, n).astype(np.float32),
+         "l_extendedprice": rng.uniform(1.0, 1e5, n).astype(np.float32)},
+        {"l_shipdate": dt.INT32, "l_discount": dt.FLOAT32,
+         "l_quantity": dt.FLOAT32, "l_extendedprice": dt.FLOAT32})
+    f = (col("l_shipdate").between(8800, 9100)
+         & col("l_discount").between(0.05, 0.07)
+         & (col("l_quantity") < 24.0))
+    proj = (("v", col("l_extendedprice") * col("l_discount")),)
+    stages = ((f, None), (None, proj))
+
+    def fused_fn(t):
+        out, _, _ = fused.fused_morsel_program(t, stages)
+        return out
+
+    def per_primitive_fn(t):
+        for stage in stages:
+            t, _, _ = fused.fused_morsel_program(t, (stage,))
+        return t
+
+    t_fused = timeit(_block(lambda: jax.jit(fused_fn)(table)))
+    t_prim = timeit(_block(lambda: jax.jit(per_primitive_fn)(table)))
+    rep = roofline.measure_program(fused_fn, table)
+    emit("kernels_fused_q6_scan_per_primitive", t_prim)
+    emit("kernels_fused_q6_scan_fused", t_fused,
+         derived=(f"x{t_prim / max(t_fused, 1e-9):.2f}_vs_per_primitive_"
+                  f"roofline={rep['achieved_fraction']:.4f}"))
+    detail["fused_q6_scan"] = {
+        "fused_s": t_fused, "per_primitive_s": t_prim,
+        "speedup": t_prim / max(t_fused, 1e-9), "roofline": rep}
+
+
 def bench_end_to_end(detail: dict, sf: float) -> None:
     """Q1 + Q3 through both Session backends, with dispatch counts."""
     catalog = dbgen.load_catalog(sf=sf)
@@ -123,6 +228,8 @@ def run(sf: float = 0.002) -> None:
     """Entry point for benchmarks.run: primitives + end-to-end backends."""
     detail: dict = {"on_tpu": kernel_ops.on_tpu(), "rows": N_ROWS}
     bench_primitives(detail)
+    bench_roofline(detail)
+    bench_fused_scan(detail)
     bench_end_to_end(detail, sf)
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "kernels.json"), "w") as f:

@@ -133,6 +133,10 @@ class StreamingScan:
     def batches(self) -> Iterator[DeviceTable]:
         """Drain the prefetch queue through the fused per-morsel pipeline."""
         spent = 0.0
+        # collapse filter->project->probe runs into single-dispatch fused
+        # kernels; runs here (not in fuse()) so every fused stage -- and
+        # the query's backend scope -- is in place before the first morsel
+        ops.fuse_morsel_pipeline(self.pipe)
         self.pipe.open()
         for morsel in self.morsels:
             t0 = time.perf_counter()
@@ -596,6 +600,7 @@ class Driver:
         probe_stream = self._stream(node.probe)
         dist = probe_stream.dist
         probe_batches = probe_stream.batches
+        probe_scan = probe_stream.scan
 
         if self._w > 1:
             if node.distribution == "broadcast":
@@ -609,6 +614,7 @@ class Driver:
                 probe_tab = self._repartition(probe_tab, node.probe_keys,
                                               "join-probe")
                 probe_batches = self._rebatch(probe_tab)
+                probe_scan = None       # the scan is already drained
                 dist = "partitioned"
             # 'local': co-partitioned already, no movement
 
@@ -640,7 +646,20 @@ class Driver:
         join.open()
         join.add_build(build)
         join.seal_build()
-        out = self._run_pipeline(join, probe_batches)
+        if (probe_scan is not None and join._hash_state is not None
+                and not join._multi
+                and join.name not in self.ctx.host_only_ops):
+            # fuse the single-match probe into the scan's per-morsel
+            # pipeline: the iteration-start collapse folds it (plus any
+            # preceding fused filter/project stages) into one Pallas
+            # dispatch per morsel. The join's time folds into the
+            # StreamingScan entry of op_seconds; the returned stream drops
+            # the scan so downstream stages keep their own dispatches
+            # (fusing past a join would also skew its feedback counts).
+            probe_scan.fuse(join)
+            out = probe_batches
+        else:
+            out = self._run_pipeline(join, probe_batches)
         if op_key is not None:
             out = self._release_after(out, op_key)
         return Stream(out, dist)

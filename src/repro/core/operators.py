@@ -33,6 +33,7 @@ import numpy as np
 
 from ..kernels import ops as kernel_ops
 from . import dtypes as dt
+from . import fused
 from . import relational as rel
 from .expr import Expr
 from .table import DeviceTable, concat_tables
@@ -425,12 +426,58 @@ def _build_join_table(build: DeviceTable, build_keys):
     return rel.join_build(key, build.validity)
 
 
+def _join_probe_key(table: DeviceTable, key_names, pack):
+    """Single-lane join key for the open-addressing table: the raw
+    int-like column, or the injective composite pack. Packed keys are
+    nonnegative by construction, so they can never alias the empty
+    sentinel; out-of-range probe values map *to* the sentinel and are
+    masked to no-match by the callers."""
+    cols = [table.columns[k] for k in key_names]
+    if pack is not None:
+        return rel.packed_key(cols, pack, empty_key=EMPTY_KEY)
+    key, _ = rel.join_key(cols)
+    return key
+
+
 @table_op()
-def _build_hash_table(build: DeviceTable, build_keys, table_size: int):
-    key, _ = rel.join_key([build.columns[k] for k in build_keys])
+def _build_hash_table(build: DeviceTable, build_keys, table_size: int, pack):
+    key = _join_probe_key(build, build_keys, pack)
     rows = jnp.arange(key.shape[0], dtype=jnp.int32)
     return kernel_ops.build_table(key, rows, table_size,
                                   empty_key=EMPTY_KEY, valid=build.validity)
+
+
+_PACKABLE_DTYPES = ("int32", "date32", "dict32")
+
+
+def _derive_pack(build: DeviceTable, build_keys):
+    """Host-side injective-pack windows for a composite int-like key.
+
+    Returns ``((lo, span), ...)`` per key column — derived from the valid
+    build rows' min/max (worker-stacked builds share one global window, a
+    sound superset per worker) — or None when any column is not int-like
+    or the windows' product overflows the int32 key lane. The resulting
+    ``relational.packed_key`` is injective over in-window tuples, so no
+    post-probe verification is needed; every valid build row is in-window
+    by construction, and probe tuples outside any window pack to the empty
+    sentinel (no build key can match them).
+    """
+    cols = []
+    for k in build_keys:
+        if build.schema[k].name not in _PACKABLE_DTYPES:
+            return None
+        cols.append(np.asarray(build.columns[k]).reshape(-1))
+    valid = np.asarray(build.validity).reshape(-1)
+    pack, prod = [], 1
+    for c in cols:
+        vals = c[valid]
+        lo = int(vals.min()) if vals.size else 0
+        span = int(vals.max()) - lo + 1 if vals.size else 1
+        prod *= span
+        if prod > np.iinfo(np.int32).max:
+            return None
+        pack.append((lo, span))
+    return tuple(pack)
 
 
 def _probe_bound(table_keys: np.ndarray) -> int:
@@ -456,21 +503,13 @@ def _probe_bound(table_keys: np.ndarray) -> int:
     return min(int(2 ** np.ceil(np.log2(max(longest + 1, 2)))), t)
 
 
-@table_op(n_tables=2)
-def _probe_join_pallas(probe: DeviceTable, hash_state, probe_keys,
-                       build_payload, join_type: str, max_probes: int):
-    """Open-addressing probe (Pallas ``hash_probe``): one table lookup per
-    probe row. Reached only for single exact int-like keys against a build
-    side the planner proved unique (``max_matches == 1``) or for semi/anti
-    joins, where membership alone decides; output row i is probe row i."""
-    build, tk, tv = hash_state
-    key, _ = rel.join_key([probe.columns[k] for k in probe_keys])
-    found, bidx = kernel_ops.hash_probe(tk, tv, key, empty_key=EMPTY_KEY,
-                                        max_probes=max_probes)
-    # a probe key equal to the empty sentinel reads an empty slot as a hit;
-    # no such key occupies the table (seal_build falls back if a valid
-    # build key is EMPTY_KEY), so masking it is exact
-    found = found & probe.validity & (key != EMPTY_KEY)
+def _attach_build_payload(probe: DeviceTable, build: DeviceTable, found,
+                          bidx, build_payload, join_type: str) -> DeviceTable:
+    """Single-match output assembly (output row i is probe row i), shared
+    by the standalone ``hash_probe`` path and the fused morsel kernel:
+    semi/anti filter on membership, inner/left_outer gather the build
+    payload by matched row (left_outer zero-fills unmatched rows and
+    carries ``__matched``, matching the jnp path)."""
     if join_type == "left_semi":
         return probe.filter(found)
     if join_type == "left_anti":
@@ -482,7 +521,6 @@ def _probe_join_pallas(probe: DeviceTable, hash_state, probe_keys,
     for n in build_payload:
         v = jnp.take(build.columns[n], safe, axis=0)
         if join_type == "left_outer":
-            # match the jnp path: unmatched probe rows carry zeroed payload
             mask = found.reshape(found.shape + (1,) * (v.ndim - 1))
             v = jnp.where(mask, v, jnp.zeros((), v.dtype))
         cols[n] = v
@@ -492,6 +530,96 @@ def _probe_join_pallas(probe: DeviceTable, hash_state, probe_keys,
         schema["__matched"] = dt.BOOL
         return DeviceTable(cols, probe.validity, schema)
     return DeviceTable(cols, found, schema)
+
+
+@table_op(n_tables=2)
+def _probe_join_pallas(probe: DeviceTable, hash_state, probe_keys,
+                       build_payload, join_type: str, max_probes: int, pack):
+    """Open-addressing probe (Pallas ``hash_probe``): one table lookup per
+    probe row. Reached for exact int-like keys (single, or composite via
+    the injective ``pack``) against a build side the planner proved unique
+    (``max_matches == 1``) or for semi/anti joins, where membership alone
+    decides; output row i is probe row i."""
+    build, tk, tv = hash_state
+    key = _join_probe_key(probe, probe_keys, pack)
+    found, bidx = kernel_ops.hash_probe(tk, tv, key, empty_key=EMPTY_KEY,
+                                        max_probes=max_probes)
+    # a probe key equal to the empty sentinel reads an empty slot as a hit;
+    # no such key occupies the table (seal_build falls back if a valid
+    # build key is EMPTY_KEY, and packed keys are nonnegative), so masking
+    # it is exact
+    found = found & probe.validity & (key != EMPTY_KEY)
+    return _attach_build_payload(probe, build, found, bidx, build_payload,
+                                 join_type)
+
+
+@table_op(n_tables=2)
+def _probe_join_pallas_multi(probe: DeviceTable, hash_state, probe_keys,
+                             build_payload, join_type: str, max_probes: int,
+                             max_matches: int, pack):
+    """Expansion probe (Pallas ``hash_probe_multi``): probe row i owns
+    output rows [i*m, (i+1)*m), the same static-capacity layout as the jnp
+    ``relational.join_probe`` path, so downstream compaction and the
+    oracle agree bit-for-bit. Matches surface in build-row order (the
+    cooperative build places duplicate keys along the run in ascending row
+    index), mirroring the sorted-key oracle's emission order."""
+    build, tk, tv = hash_state
+    key = _join_probe_key(probe, probe_keys, pack)
+    count, slots = kernel_ops.hash_probe_multi(
+        tk, tv, key, max_matches, empty_key=EMPTY_KEY, max_probes=max_probes)
+    # sentinel mask, as in the single-match probe: an empty slot compares
+    # equal to a sentinel probe key and would report one bogus match
+    live = probe.validity & (key != EMPTY_KEY)
+    count = jnp.where(live, count, 0)
+    p = key.shape[0]
+    j = jnp.arange(p * max_matches, dtype=jnp.int32)
+    probe_idx = j // max_matches
+    valid = (j % max_matches) < jnp.take(count, probe_idx)
+    build_idx = slots.reshape(-1)        # garbage past count; masked by valid
+    return _expand_join_output(probe, build, probe_idx, build_idx, valid,
+                               build_payload, join_type)
+
+
+def _expand_join_output(probe: DeviceTable, build_table: DeviceTable,
+                        probe_idx, build_idx, valid, build_payload,
+                        join_type: str) -> DeviceTable:
+    """Expansion-layout output assembly shared by the jnp ``_probe_join``
+    tail and the Pallas expansion probe: scatter-max membership for
+    semi/anti, gather both sides for inner, append unmatched probe rows
+    for left_outer."""
+    if join_type in ("left_semi", "left_anti"):
+        hit = jnp.zeros(probe.capacity, dtype=jnp.int32)
+        hit = hit.at[probe_idx].max(valid.astype(jnp.int32))
+        mask = probe.validity & (hit > 0)
+        if join_type == "left_anti":
+            mask = probe.validity & ~mask
+        return probe.filter(mask)
+
+    cols, schema = {}, {}
+    for n in probe.column_names:
+        cols[n] = jnp.take(probe.columns[n], probe_idx, axis=0)
+        schema[n] = probe.schema[n]
+    for n in build_payload:
+        cols[n] = jnp.take(build_table.columns[n], build_idx, axis=0)
+        schema[n] = build_table.schema[n]
+    out_valid = valid
+
+    if join_type == "left_outer":
+        # append unmatched probe rows with zeroed build payload + match flag
+        hit = jnp.zeros(probe.capacity, dtype=jnp.int32)
+        hit = hit.at[probe_idx].max(valid.astype(jnp.int32))
+        unmatched = probe.validity & (hit == 0)
+        for n in probe.column_names:
+            cols[n] = jnp.concatenate([cols[n], probe.columns[n]], axis=0)
+        for n in build_payload:
+            shape = (probe.capacity,) + cols[n].shape[1:]
+            cols[n] = jnp.concatenate([cols[n], jnp.zeros(shape, cols[n].dtype)],
+                                      axis=0)
+        out_valid = jnp.concatenate([out_valid, unmatched], axis=0)
+        cols["__matched"] = jnp.concatenate(
+            [valid, jnp.zeros(probe.capacity, bool)])
+        schema["__matched"] = dt.BOOL
+    return DeviceTable(cols, out_valid, schema)
 
 
 @table_op(n_tables=2)
@@ -514,40 +642,8 @@ def _probe_join(probe: DeviceTable, build_state, probe_keys, build_keys,
             bv = jnp.take(build_table.columns[bk], res.build_idx, axis=0)
             eq = jnp.all(pv == bv, axis=-1) if pv.ndim > 1 else (pv == bv)
             valid = valid & eq
-
-    if join_type in ("left_semi", "left_anti"):
-        hit = jnp.zeros(probe.capacity, dtype=jnp.int32)
-        hit = hit.at[res.probe_idx].max(valid.astype(jnp.int32))
-        mask = probe.validity & (hit > 0)
-        if join_type == "left_anti":
-            mask = probe.validity & ~mask
-        return probe.filter(mask)
-
-    cols, schema = {}, {}
-    for n in probe.column_names:
-        cols[n] = jnp.take(probe.columns[n], res.probe_idx, axis=0)
-        schema[n] = probe.schema[n]
-    for n in build_payload:
-        cols[n] = jnp.take(build_table.columns[n], res.build_idx, axis=0)
-        schema[n] = build_table.schema[n]
-    out_valid = valid
-
-    if join_type == "left_outer":
-        # append unmatched probe rows with zeroed build payload + match flag
-        hit = jnp.zeros(probe.capacity, dtype=jnp.int32)
-        hit = hit.at[res.probe_idx].max(valid.astype(jnp.int32))
-        unmatched = probe.validity & (hit == 0)
-        for n in probe.column_names:
-            cols[n] = jnp.concatenate([cols[n], probe.columns[n]], axis=0)
-        for n in build_payload:
-            shape = (probe.capacity,) + cols[n].shape[1:]
-            cols[n] = jnp.concatenate([cols[n], jnp.zeros(shape, cols[n].dtype)],
-                                      axis=0)
-        out_valid = jnp.concatenate([out_valid, unmatched], axis=0)
-        cols["__matched"] = jnp.concatenate(
-            [valid, jnp.zeros(probe.capacity, bool)])
-        schema["__matched"] = dt.BOOL
-    return DeviceTable(cols, out_valid, schema)
+    return _expand_join_output(probe, build_table, res.probe_idx,
+                               res.build_idx, valid, build_payload, join_type)
 
 
 class HashJoin(Operator):
@@ -558,19 +654,23 @@ class HashJoin(Operator):
 
     * 'jnp'    -- the build side becomes a sorted key array probed with
                   searchsorted (doubles as the oracle);
-    * 'pallas' -- single exact int-like keys build an open-addressing
-                  table (``kernels.build_table``, power-of-two slots sized
-                  2x the planner's ``build_rows`` bound) probed by the
-                  ``hash_probe`` kernel. Taken for semi/anti joins and for
-                  ``max_matches == 1`` joins (planner-proved unique build);
-                  expansion joins, hashed composite keys, build keys equal
-                  to the empty sentinel (-1) and oversized builds fall
-                  back to the jnp path, and probe keys equal to the
-                  sentinel are masked to no-match (no such key can occupy
-                  the table).
+    * 'pallas' -- exact int-like keys build an open-addressing table
+                  (``kernels.build_table``, power-of-two slots sized 2x
+                  the planner's ``build_rows`` bound). Composite int-like
+                  keys pack injectively into one int32 lane when their
+                  value windows fit (``_derive_pack``). Semi/anti and
+                  ``max_matches == 1`` joins probe with ``hash_probe``;
+                  expansion joins probe with ``hash_probe_multi`` (static
+                  ``P x max_matches`` output, same layout as the jnp
+                  path). Non-integer keys, unpackably wide composites,
+                  build keys equal to the empty sentinel (-1) and
+                  oversized builds fall back to the jnp path; probe keys
+                  equal to the sentinel are masked to no-match (no such
+                  key can occupy the table).
 
-    Hashed multi-column keys are verified after the probe, as in a
-    bucketed hash join. ``max_matches`` is the planner's
+    Hashed multi-column keys on the jnp path are verified after the probe,
+    as in a bucketed hash join (packed composites need no verification —
+    the pack is injective). ``max_matches`` is the planner's
     expansion-capacity hint; the oracle tests assert it is never exceeded.
     """
 
@@ -593,20 +693,22 @@ class HashJoin(Operator):
         self._hash_state = None          # (build, table_keys, table_vals)
         self._max_probes = 0
         self._exact = True
+        self._pack = None                # composite-key windows, or None
+        self._multi = False              # expansion probe (hash_probe_multi)
 
     # build side is fed by the driver before probing starts
     def add_build(self, batch: DeviceTable):
         """Accumulate one build-side batch (device-resident)."""
         self._build_batches.append(batch)
 
-    def _try_pallas_build(self, build: DeviceTable) -> bool:
+    def _try_pallas_build(self, build: DeviceTable, pack) -> bool:
         """Build the open-addressing table; False -> jnp fallback."""
         cap = int(build.validity.shape[-1])
         bound = min(self.build_rows or cap, cap)
         table_size = max(int(2 ** np.ceil(np.log2(max(2 * bound, 2)))), 2)
         if table_size > MAX_HASH_TABLE_SLOTS:
             return False
-        tk, tv = _build_hash_table(build, self.build_keys, table_size)
+        tk, tv = _build_hash_table(build, self.build_keys, table_size, pack)
         tk_host = np.asarray(tk)
         # every valid build row must occupy a slot: a shortfall means a key
         # collided with the empty sentinel (e.g. a -1 key) -- probing that
@@ -626,18 +728,26 @@ class HashJoin(Operator):
         build = concat_tables(self._build_batches)
         self._build_batches = []
         kt = [build.schema[k] for k in self.build_keys]
-        self._exact = (len(kt) == 1 and kt[0].name in
-                       ("int32", "date32", "dict32"))
-        eligible = (self._exact
-                    and (self.join_type in ("left_semi", "left_anti")
-                         or self.max_matches == 1))
+        self._exact = (len(kt) == 1 and kt[0].name in _PACKABLE_DTYPES)
         if kernel_ops.current_backend() == "pallas":
-            if eligible and self._try_pallas_build(build):
+            pack = None
+            key_ok = self._exact
+            if not key_ok and len(kt) >= 2:
+                # composite int-like keys: try the injective single-lane
+                # pack (a host-side range derivation — the same host sync
+                # the occupancy check below performs anyway)
+                pack = _derive_pack(build, self.build_keys)
+                key_ok = pack is not None
+            if key_ok and self._try_pallas_build(build, pack):
+                self._pack = pack
+                self._multi = not (self.join_type in ("left_semi",
+                                                      "left_anti")
+                                   or self.max_matches == 1)
                 return
-            # probe wanted the hash_probe kernel but couldn't take it
-            # (expansion join, composite key, sentinel-colliding key, or a
-            # build_rows bound past the table's slot budget). Counted once
-            # per sealed build so the adaptive suite can assert warm
+            # probe wanted a hash kernel but couldn't take it (non-integer
+            # or unpackably wide composite key, sentinel-colliding key, or
+            # a build_rows bound past the table's slot budget). Counted
+            # once per sealed build so the adaptive suite can assert warm
             # re-plans with tighter bounds shrink it.
             kernel_ops.count_dispatch("fallback_probe")
         bt = _build_join_table(build, self.build_keys)
@@ -645,9 +755,19 @@ class HashJoin(Operator):
 
     def add_input(self, batch):
         if self._hash_state is not None:
+            if self._multi:
+                out = _probe_join_pallas_multi(
+                    batch, self._hash_state, self.probe_keys,
+                    self.build_payload, self.join_type, self._max_probes,
+                    self.max_matches, self._pack)
+                if (self.compact
+                        and self.join_type in ("inner", "left_outer")):
+                    out = compact_table(out)
+                return [out]
             return [_probe_join_pallas(batch, self._hash_state,
                                        self.probe_keys, self.build_payload,
-                                       self.join_type, self._max_probes)]
+                                       self.join_type, self._max_probes,
+                                       self._pack)]
         assert self._state is not None, "probe before build sealed"
         out = _probe_join(batch, self._state, self.probe_keys, self.build_keys,
                           self.build_payload, self.join_type, self.max_matches,
@@ -881,6 +1001,90 @@ def _compact(table: DeviceTable):
 def compact_table(table: DeviceTable) -> DeviceTable:
     """Stream-compact a (possibly worker-stacked) table (paper 3.3.2)."""
     return _compact(table)
+
+
+# ---------------------------------------------------------------------------
+# FusedMorsel: one Pallas dispatch per morsel (filter -> project -> probe)
+# ---------------------------------------------------------------------------
+
+@table_op()
+def _fused_morsel(table: DeviceTable, stages):
+    out, _, _ = fused.fused_morsel_program(table, stages)
+    return out
+
+
+@table_op(n_tables=2)
+def _fused_morsel_probe(table: DeviceTable, hash_state, stages, probe_keys,
+                        build_payload, join_type: str, max_probes: int, pack):
+    build, tk, tv = hash_state
+    out, found, bidx = fused.fused_morsel_program(
+        table, stages,
+        probe=dict(tk=tk, tv=tv, probe_keys=probe_keys, pack=pack,
+                   empty_key=EMPTY_KEY, max_probes=max_probes))
+    return _attach_build_payload(out, build, found, bidx, build_payload,
+                                 join_type)
+
+
+class FusedMorsel(Operator):
+    """A collapsed run of FilterProject stages — optionally ending in a
+    single-match open-addressing probe — executed as one Pallas kernel per
+    morsel (``core.fused``). Created by ``fuse_morsel_pipeline``; never
+    built by the planner directly."""
+
+    name = "FusedMorsel"
+
+    def __init__(self, stages, join: Optional[HashJoin] = None):
+        self.stages = tuple(stages)
+        self.join = join
+
+    def add_input(self, batch):
+        if self.join is None:
+            return [_fused_morsel(batch, self.stages)]
+        j = self.join
+        return [_fused_morsel_probe(batch, j._hash_state, self.stages,
+                                    j.probe_keys, j.build_payload,
+                                    j.join_type, j._max_probes, j._pack)]
+
+
+def fuse_morsel_pipeline(pipe: Pipeline) -> None:
+    """Collapse the scan pipeline's runs of non-compacting FilterProjects
+    (optionally ending in an eligible single-match pallas HashJoin probe)
+    into ``FusedMorsel`` operators — one Pallas dispatch per morsel
+    instead of one per primitive, with no intermediate morsel
+    materialization. Called by the driver's ``StreamingScan`` at iteration
+    start, inside the query's backend scope; no-op under the jnp backend.
+
+    A lone FilterProject stays unfused (same dispatch count either way);
+    expansion probes, jnp-state joins and compacting stages keep their
+    standalone operators.
+    """
+    if kernel_ops.current_backend() != "pallas":
+        return
+    new_ops: List[Operator] = []
+    run: List[FilterProject] = []
+
+    def stages():
+        return [(fp.filter_expr, fp.projections) for fp in run]
+
+    def flush():
+        if len(run) >= 2:
+            new_ops.append(FusedMorsel(stages()))
+        else:
+            new_ops.extend(run)
+        run.clear()
+
+    for op in pipe.ops:
+        if isinstance(op, FilterProject) and not op.compact:
+            run.append(op)
+        elif (isinstance(op, HashJoin) and run
+                and op._hash_state is not None and not op._multi):
+            new_ops.append(FusedMorsel(stages(), join=op))
+            run.clear()
+        else:
+            flush()
+            new_ops.append(op)
+    flush()
+    pipe.ops = new_ops
 
 
 @table_op()

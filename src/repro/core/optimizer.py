@@ -603,12 +603,28 @@ def derive_capacities(node: P.PlanNode, catalog,
                 new = dataclasses.replace(new, build_rows=br)
         if new.join_type in ("left_semi", "left_anti"):
             return new
+        try:
+            br_static = row_bound(new.build, catalog)
+        except TypeError:
+            br_static = None       # exchange-wrapped subtree
+
+        def clamp(mm: int) -> int:
+            # a probe row cannot match more rows than the build side can
+            # hold on any probe path (hash collisions included — only that
+            # many rows exist), so the *static* build bound caps the
+            # expansion capacity. Never clamp by the feedback-tightened
+            # build_rows: its safety net (the occupancy-check fallback)
+            # protects table sizing, not match capacity.
+            if br_static is not None and mm > br_static:
+                return max(int(br_static), 1)
+            return mm
+
         if _build_side_unique(new, catalog):
             # exact unique key: exactly one candidate row per probe row.
             # hashed (composite/multi-column) unique key: matches beyond the
             # first are hash collisions, filtered by the verify pass -- a
             # small constant of headroom suffices.
-            mm = 1 if _exact_key(new, catalog) else 4
+            mm = 1 if _exact_key(new, catalog) else clamp(4)
             return dataclasses.replace(new, max_matches=mm)
         if config.feedback is not None and _exact_key(new, catalog):
             # uniqueness unprovable statically, but the driver measured the
@@ -618,6 +634,9 @@ def derive_capacities(node: P.PlanNode, catalog,
                 config.feedback.key_for(new, catalog, config.num_workers))
             if mm_obs is not None and mm_obs < new.max_matches:
                 return dataclasses.replace(new, max_matches=max(mm_obs, 1))
+        if clamp(new.max_matches) != new.max_matches:
+            return dataclasses.replace(new,
+                                       max_matches=clamp(new.max_matches))
         # uniqueness unprovable: keep the hand-set capacity
 
     return new

@@ -21,9 +21,12 @@ from ..kernels import ops as kernel_ops
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
 
-# pallas segmented_sum accumulates in float32 slabs of GROUP_BLOCK; beyond
-# this capacity (or for 8-byte values) the jnp segment_sum path is both
-# faster to trace and exact, so dispatch falls back
+# the pallas segmented-agg kernels accumulate in GROUP_BLOCK slabs; past
+# this capacity (or for 8-byte values) the jnp segment_* path is both
+# faster to trace and exact, so dispatch falls back. Inclusive bound,
+# matching the VMEM sizing note in kernels/segmented_agg.py: exactly
+# 1 << 16 groups still dispatches to the kernels; all accumulators
+# (float sum, int sum, min/max) share it.
 PALLAS_AGG_GROUP_LIMIT = 1 << 16
 
 
@@ -73,6 +76,30 @@ def join_key(cols: Sequence[jax.Array]) -> Tuple[jax.Array, bool]:
     if len(cols) == 1 and jnp.issubdtype(cols[0].dtype, jnp.integer):
         return cols[0].astype(jnp.int32), True
     return hash_combine(cols), False
+
+
+def packed_key(cols: Sequence[jax.Array], pack: Sequence[Tuple[int, int]],
+               empty_key: int = -1) -> jax.Array:
+    """Injectively pack int columns into one nonnegative int32 key.
+
+    ``pack`` gives a ``(lo, span)`` window per column — the valid build
+    side's observed value range, derived host-side at ``seal_build``
+    (eligible only when the spans' product fits 2^31 - 1, so the fold
+    below never overflows int32). In-range rows map to a *unique* key in
+    ``[0, prod(spans))`` — strictly nonnegative, so a packed key can never
+    alias the empty-slot sentinel. Rows with any column outside its window
+    cannot equal any build key and map to ``empty_key`` (the probe's
+    sentinel mask then reports them unmatched); values are clipped before
+    folding so even far-out-of-range probes stay overflow-free.
+    """
+    n = cols[0].shape[0]
+    key = jnp.zeros((n,), jnp.int32)
+    ok = jnp.ones((n,), bool)
+    for c, (lo, span) in zip(cols, pack):
+        c = c.astype(jnp.int32)
+        ok = ok & (c >= lo) & (c < lo + span)
+        key = key * span + jnp.clip(c - lo, 0, span - 1)
+    return jnp.where(ok, key, empty_key)
 
 
 # ---------------------------------------------------------------------------
@@ -177,46 +204,58 @@ def segment_agg(values: jax.Array, gids: jax.Array, order: jax.Array,
                 validity: jax.Array, max_groups: int, kind: str) -> jax.Array:
     """Aggregate ``values`` per group id. kind in sum|count|min|max.
 
-    sum/count dispatch to the Pallas ``segmented_sum`` MXU scatter-add when
-    the session's kernel backend is 'pallas' (4-byte values, capacity under
-    ``PALLAS_AGG_GROUP_LIMIT``); min/max and the fallback cases run the
-    ``jax.ops.segment_*`` path, which doubles as the kernel's oracle.
+    Under the 'pallas' kernel backend every kind dispatches to a
+    segmented-agg kernel for 1-D 4-byte values: float sums to the MXU
+    scatter-add, integer sums and counts to its int32-accumulator variant
+    (exact past 2^24, wrapping at 2^31 like the oracle), min/max to the
+    masked-reduction variant. The only remaining fallback is capacity —
+    ``max_groups`` past ``PALLAS_AGG_GROUP_LIMIT`` (an inclusive bound:
+    exactly ``1 << 16`` groups still dispatches) — plus 8-byte/multi-dim
+    values; those run the ``jax.ops.segment_*`` path, which doubles as
+    the kernel's oracle.
     """
     v = jnp.take(values, order, axis=0)
     valid_sorted = jnp.take(validity, order)
     seg = jnp.where(valid_sorted, gids, max_groups)
 
-    # float32 accumulation: exact for counts below 2^24 rows per call
-    # (partial counts merge as *integer* sums, which stay on the jnp
-    # path), inexact-by-reduction-order for float sums exactly like any
-    # matmul reduction. Integer sums are excluded -- they must stay exact
-    # past 2^24, which float32 cannot represent.
-    pallas_ok = (kernel_ops.current_backend() == "pallas" and v.ndim == 1
-                 and max_groups <= PALLAS_AGG_GROUP_LIMIT
-                 and ((kind == "sum"
-                       and jnp.issubdtype(v.dtype, jnp.floating)
-                       and v.dtype.itemsize <= 4)
-                      or (kind == "count" and v.shape[0] <= (1 << 24))))
+    kernel_kind_ok = (v.ndim == 1 and v.dtype.itemsize <= 4 and (
+        kind == "count"
+        or (kind in ("sum", "min", "max")
+            and (jnp.issubdtype(v.dtype, jnp.floating)
+                 or jnp.issubdtype(v.dtype, jnp.integer)))))
+    pallas_ok = (kernel_ops.current_backend() == "pallas"
+                 and kernel_kind_ok
+                 and max_groups <= PALLAS_AGG_GROUP_LIMIT)
     if pallas_ok:
         if kind == "count":
-            acc = valid_sorted.astype(jnp.float32)
-        else:
+            return kernel_ops.segmented_int_sum(
+                seg, valid_sorted.astype(jnp.int32), max_groups)
+        if kind == "sum":
             # zero dead rows: their values may be NaN/inf (dead-lane
             # arithmetic) and 0 * NaN would poison the one-hot matmul
-            acc = jnp.where(valid_sorted, v,
-                            jnp.zeros((), v.dtype)).astype(jnp.float32)
-        out = kernel_ops.segmented_sum(seg, acc, max_groups)
-        if kind == "count":
-            return jnp.round(out).astype(jnp.int32)
-        return out.astype(v.dtype)
+            acc = jnp.where(valid_sorted, v, jnp.zeros((), v.dtype))
+            if jnp.issubdtype(v.dtype, jnp.integer):
+                # int32 accumulator: exact past 2^24, same wrap as oracle
+                return kernel_ops.segmented_int_sum(
+                    seg, acc, max_groups).astype(v.dtype)
+            # float32 accumulation: inexact-by-reduction-order exactly
+            # like any matmul reduction
+            out = kernel_ops.segmented_sum(seg, acc.astype(jnp.float32),
+                                           max_groups)
+            return out.astype(v.dtype)
+        # min/max: dead rows carry the reduction identity so NaN/inf
+        # dead-lane arithmetic can't leak into a group
+        acc = jnp.where(valid_sorted, v,
+                        _extreme(v.dtype, +1 if kind == "min" else -1))
+        return kernel_ops.segmented_minmax(seg, acc, max_groups, kind)
 
-    if kernel_ops.current_backend() == "pallas" and v.ndim == 1 and (
-            (kind == "sum" and jnp.issubdtype(v.dtype, jnp.floating)
-             and v.dtype.itemsize <= 4) or kind == "count"):
+    if kernel_ops.current_backend() == "pallas" and kernel_kind_ok:
         # eligible shape/kind, blocked only by capacity: the static
-        # max_groups bound (or a >2^24-row count) pushed an otherwise
-        # kernel-servable aggregation onto the jnp path. Recorded per
-        # dispatch so adaptive re-planning can prove it shrank the count.
+        # max_groups bound pushed an otherwise kernel-servable
+        # aggregation onto the jnp path. Recorded per dispatch so
+        # adaptive re-planning can prove it shrank the count. Gated on
+        # the pallas backend: a jnp session never "falls back", so its
+        # kernel_dispatch stats must stay empty.
         kernel_ops.mark_fallback("agg")
 
     n = max_groups + 1

@@ -30,13 +30,16 @@ def _hash(x):
     return x.astype(jnp.int32)
 
 
-def _kernel(tk_ref, tv_ref, pk_ref, found_ref, val_ref, *,
-            table_size: int, empty_key: int, max_probes: int):
-    keys = pk_ref[...]                              # [PB]
+def probe_loop(table_keys, table_vals, keys, *, table_size: int,
+               empty_key: int, max_probes: int):
+    """Single-match masked linear probe over a block of keys.
+
+    Shared by the standalone ``hash_probe`` kernel and the fused morsel
+    kernel (``fused_pipeline``): all lanes advance together, lanes that
+    found their key (or an empty slot) stop contributing.
+    """
     mask = table_size - 1
     h = _hash(keys) & mask
-    table_keys = tk_ref[...]
-    table_vals = tv_ref[...]
 
     def body(i, carry):
         found, val, done = carry
@@ -54,8 +57,66 @@ def _kernel(tk_ref, tv_ref, pk_ref, found_ref, val_ref, *,
         0, max_probes, body,
         (jnp.zeros(keys.shape, jnp.bool_), zero,
          jnp.zeros(keys.shape, jnp.bool_)))
+    return found, val
+
+
+def probe_loop_multi(table_keys, table_vals, keys, *, table_size: int,
+                     empty_key: int, max_probes: int, max_matches: int):
+    """Multi-match (expansion) probe: walk the whole occupied run.
+
+    Duplicate build keys occupy distinct slots of one linear-probe run
+    (cooperative insertion places them round by round), so a lane keeps a
+    cursor instead of a done-on-hit flag: every matching slot appends the
+    slot's value to the lane's match list until the run's first empty slot
+    (or the match capacity) stops it. Matches land in build-row order --
+    duplicates are placed along the run in ascending row index -- which is
+    the same order the sorted-key oracle emits.
+
+    Returns (count int32[PB], slots int32[PB, max_matches]); slots past a
+    lane's count hold garbage and must be masked by the caller.
+    """
+    mask = table_size - 1
+    h = _hash(keys) & mask
+    m = max_matches
+    lane = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], m), 1)
+
+    def body(i, carry):
+        count, slots, done = carry
+        idx = (h + i) & mask
+        slot_keys = jnp.take(table_keys, idx)
+        slot_vals = jnp.take(table_vals, idx)
+        hit = (slot_keys == keys) & (~done) & (count < m)
+        sel = hit[:, None] & (lane == count[:, None])
+        slots = jnp.where(sel, slot_vals[:, None], slots)
+        count = count + hit.astype(jnp.int32)
+        miss = (slot_keys == empty_key) & (~done)
+        return count, slots, done | miss | (count >= m)
+
+    count0 = jnp.zeros(keys.shape, jnp.int32)
+    slots0 = jnp.zeros((keys.shape[0], m), jnp.int32)
+    done0 = jnp.zeros(keys.shape, jnp.bool_)
+    count, slots, _ = jax.lax.fori_loop(0, max_probes, body,
+                                        (count0, slots0, done0))
+    return count, slots
+
+
+def _kernel(tk_ref, tv_ref, pk_ref, found_ref, val_ref, *,
+            table_size: int, empty_key: int, max_probes: int):
+    found, val = probe_loop(tk_ref[...], tv_ref[...], pk_ref[...],
+                            table_size=table_size, empty_key=empty_key,
+                            max_probes=max_probes)
     found_ref[...] = found
     val_ref[...] = val
+
+
+def _expand_kernel(tk_ref, tv_ref, pk_ref, cnt_ref, slot_ref, *,
+                   table_size: int, empty_key: int, max_probes: int,
+                   max_matches: int):
+    count, slots = probe_loop_multi(
+        tk_ref[...], tv_ref[...], pk_ref[...], table_size=table_size,
+        empty_key=empty_key, max_probes=max_probes, max_matches=max_matches)
+    cnt_ref[...] = count
+    slot_ref[...] = slots
 
 
 @functools.partial(jax.jit, static_argnames=("table_size", "empty_key"))
@@ -140,3 +201,48 @@ def hash_probe(table_keys, table_vals, probe_keys, empty_key: int = -1,
         interpret=interpret,
     )(table_keys, table_vals, probe_keys)
     return found[:n], vals[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("max_matches", "empty_key",
+                                             "max_probes", "probe_block",
+                                             "interpret"))
+def hash_probe_multi(table_keys, table_vals, probe_keys, max_matches: int,
+                     empty_key: int = -1,
+                     max_probes: int = MAX_PROBES_DEFAULT,
+                     probe_block: int = PROBE_BLOCK, interpret: bool = False):
+    """Expansion probe -> (count int32[N], slots int32[N, max_matches]).
+
+    ``slots[i, :count[i]]`` are the table values (build row indices) of
+    every slot whose key equals ``probe_keys[i]``, in run order; entries
+    past the count are garbage. Probe keys equal to ``empty_key`` report a
+    bogus match (an empty slot compares equal) and must be masked by the
+    caller, exactly as with ``hash_probe``.
+    """
+    n = probe_keys.shape[0]
+    t = table_keys.shape[0]
+    assert t & (t - 1) == 0, "table size must be a power of two"
+    m = max_matches
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0, m), jnp.int32))
+    probe_block = min(probe_block, n)
+    pad = (-n) % probe_block
+    if pad:
+        probe_keys = jnp.pad(probe_keys, (0, pad), constant_values=empty_key)
+    n_pad = probe_keys.shape[0]
+    grid = (n_pad // probe_block,)
+    count, slots = pl.pallas_call(
+        functools.partial(_expand_kernel, table_size=t, empty_key=empty_key,
+                          max_probes=min(max_probes, t), max_matches=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t,), lambda i: (0,)),       # table resident in VMEM
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((probe_block,), lambda i: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((probe_block,), lambda i: (i,)),
+                   pl.BlockSpec((probe_block, m), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_pad, m), jnp.int32)],
+        interpret=interpret,
+    )(table_keys, table_vals, probe_keys)
+    return count[:n], slots[:n]

@@ -33,9 +33,12 @@ import jax
 from . import ref  # noqa: F401  (oracles re-exported for convenience)
 from .block_prefix_sum import block_prefix_sum as _bps
 from .flash_attention import flash_attention as _flash
-from .hash_probe import build_table as _build, hash_probe as _probe
+from .hash_probe import (build_table as _build, hash_probe as _probe,
+                         hash_probe_multi as _probe_multi)
 from .radix_histogram import radix_histogram as _hist
-from .segmented_agg import segmented_sum as _segsum
+from .segmented_agg import (segmented_int_sum as _segisum,
+                            segmented_minmax as _segminmax,
+                            segmented_sum as _segsum)
 
 BACKENDS = ("jnp", "pallas")
 
@@ -166,6 +169,13 @@ def _mark(kind: str) -> None:
             used.add(kind)
 
 
+def mark_kernel(kind: str) -> None:
+    """Trace-time record of a kernel dispatch for kernels that live
+    outside this package but report through the same accounting (the
+    fused per-morsel pipeline kernel in ``core.fused`` records 'fused')."""
+    _mark(kind)
+
+
 def mark_fallback(kind: str) -> None:
     """Trace-time note that a hot path wanted the pallas kernel for
     ``kind`` but took its jnp fallback (oversized capacity, composite key,
@@ -202,6 +212,23 @@ def segmented_sum(gids, values, num_groups, **kw):
     return _segsum(gids, values, num_groups, interpret=_interp(), **kw)
 
 
+def segmented_int_sum(gids, values, num_groups, **kw):
+    """Integer MXU scatter-add with an int32 accumulator (exact past 2^24,
+    wraps at 2^31 like the int32 oracle) -> int32[num_groups]. Serves both
+    integer sums and counts. Oracle: ``jax.ops.segment_sum``."""
+    _mark("agg")
+    return _segisum(gids, values, num_groups, interpret=_interp(), **kw)
+
+
+def segmented_minmax(gids, values, num_groups, kind, **kw):
+    """Segmented min/max (kind in 'min'|'max') -> [num_groups] of the
+    value dtype; empty groups hold the reduction identity. Oracle:
+    ``jax.ops.segment_min/max``."""
+    _mark("agg")
+    return _segminmax(gids, values, num_groups, kind, interpret=_interp(),
+                      **kw)
+
+
 def radix_histogram(pids, num_partitions, **kw):
     """Rows per destination partition (the exchange's metadata phase) ->
     int32[num_partitions]. Oracle: ``ref.radix_histogram``."""
@@ -222,6 +249,15 @@ def hash_probe(table_keys, table_vals, probe_keys, **kw):
     _mark("probe")
     return _probe(table_keys, table_vals, probe_keys, interpret=_interp(),
                   **kw)
+
+
+def hash_probe_multi(table_keys, table_vals, probe_keys, max_matches, **kw):
+    """Expansion probe: every slot matching a probe key, in run order ->
+    (count int32[N], slots int32[N, max_matches]). Oracle:
+    ``relational.join_probe`` over the same build rows."""
+    _mark("probe")
+    return _probe_multi(table_keys, table_vals, probe_keys, max_matches,
+                        interpret=_interp(), **kw)
 
 
 def block_prefix_sum(mask, **kw):

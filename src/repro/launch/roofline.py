@@ -81,6 +81,49 @@ def dominant(terms: Dict[str, float]) -> str:
                key=lambda k: terms[k])
 
 
+def measure_program(fn, *args, warmup: int = 1, iters: int = 3,
+                    chips: int = 1) -> Dict[str, float]:
+    """Roofline-vs-measured report for one jittable program at one shape.
+
+    Lowers and compiles ``fn(*args)``, takes FLOPs / bytes-accessed from
+    the compiled cost analysis (a one-element list on some jax versions)
+    and collective bytes from the post-SPMD HLO text, and compares the
+    roofline time bound — the max of the ``roofline_terms`` — to the
+    measured per-call wall time. ``achieved_fraction`` is bound/measured:
+    ~1.0 means the program runs at the hardware ceiling for its dominant
+    term; off-TPU (interpret-mode kernels) the fraction is tiny and only
+    the relative ordering across kernels is meaningful.
+    """
+    import time
+
+    import jax
+
+    jfn = jax.jit(fn)
+    compiled = jfn.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else (cost or {})
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll = sum(collective_bytes(compiled.as_text()).values())
+    terms = roofline_terms(flops, bytes_accessed, coll, chips=chips)
+    bound_s = max(terms.values())
+    for _ in range(warmup):
+        jax.block_until_ready(jfn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(jfn(*args))
+    measured_s = (time.perf_counter() - t0) / iters
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "collective_bytes": coll,
+        "roofline_bound_s": bound_s,
+        "measured_s": measured_s,
+        "dominant": dominant(terms),
+        "achieved_fraction": bound_s / measured_s if measured_s else 0.0,
+    }
+
+
 def model_flops(cfg, shape) -> float:
     """Analytic MODEL_FLOPS: 6*N*D train (fwd+bwd), 2*N*D prefill,
     2*N_active*B decode (one token per sequence)."""

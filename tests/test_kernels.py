@@ -248,6 +248,205 @@ def test_max_probes_exhaustion_property(n_keys, table_pow, max_probes):
                                   np.asarray(want_v)[np.asarray(want_f)])
 
 
+# ---------------------------------------------------------------------------
+# expansion probe (hash_probe_multi) + composite-key packing
+# ---------------------------------------------------------------------------
+
+def _multi_oracle(tk, tv, probes):
+    """All table values per probe key, as sorted lists (the kernel emits
+    build-row order, and table values are build row indices)."""
+    tk, tv = np.asarray(tk), np.asarray(tv)
+    return [sorted(tv[tk == p].tolist()) for p in np.asarray(probes)]
+
+
+@seeded_given(max_examples=8, n_keys=ints(4, 200), dup_factor=sampled(1, 3, 6),
+              max_matches=sampled(1, 2, 4, 8))
+def test_expansion_probe_matches_oracle_property(n_keys, dup_factor,
+                                                 max_matches):
+    """With enough match capacity the expansion probe returns exactly the
+    duplicate build rows per key (in ascending build-row order); with less,
+    it returns a prefix — never a fabricated or repeated row."""
+    rng = np.random.default_rng(n_keys * 31 + dup_factor)
+    base = rng.choice(50_000, n_keys, replace=False)
+    keys_np = np.repeat(base, rng.integers(1, dup_factor + 1, n_keys))
+    table_size = 1024
+    keys_np = keys_np[: table_size // 2]     # load factor <= 1/2
+    keys = jnp.asarray(keys_np, jnp.int32)
+    rows = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    tk, tv = ops.build_table(keys, rows, table_size)
+    probes = jnp.asarray(np.concatenate(
+        [base, rng.integers(0, 50_000, 64)]), jnp.int32)
+
+    count, slots = ops.hash_probe_multi(tk, tv, probes, max_matches,
+                                        max_probes=table_size)
+    count, slots = np.asarray(count), np.asarray(slots)
+    want = _multi_oracle(tk, tv, probes)
+    for i, w in enumerate(want):
+        got = slots[i, : count[i]].tolist()
+        assert count[i] == min(len(w), max_matches), (i, count[i], w)
+        # ascending build-row order == the oracle's sorted order, so the
+        # capacity-clipped kernel keeps exactly the first-m prefix
+        assert got == w[:max_matches], (i, got, w)
+
+
+@seeded_given(max_examples=8, n_keys=ints(4, 200), max_probes=sampled(2, 4, 8))
+def test_expansion_probe_exhaustion_subset_property(n_keys, max_probes):
+    """The ⊆-contract under an under-provisioned ``max_probes``, mirroring
+    the single-match exhaustion sweep: matches may be missed (a run longer
+    than the probe budget) but never invented, and what is returned is a
+    prefix of the oracle's match list."""
+    rng = np.random.default_rng(n_keys * 7)
+    table_size = 256
+    keys_np = rng.choice(10_000, min(n_keys, table_size // 2), replace=True)
+    keys = jnp.asarray(keys_np, jnp.int32)
+    rows = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    tk, tv = ops.build_table(keys, rows, table_size)
+    probes = jnp.asarray(np.concatenate(
+        [keys_np, rng.integers(0, 10_000, 100)]), jnp.int32)
+
+    count, slots = ops.hash_probe_multi(tk, tv, probes, 8,
+                                        max_probes=max_probes)
+    count, slots = np.asarray(count), np.asarray(slots)
+    want = _multi_oracle(tk, tv, probes)
+    for i, w in enumerate(want):
+        got = slots[i, : count[i]].tolist()
+        assert got == w[: len(got)], (i, got, w)   # prefix, never invented
+
+
+def test_expansion_probe_sentinel_key_reports_bogus_match():
+    """PR-5 sentinel regression, expansion mode: a probe key equal to the
+    empty sentinel (-1) compares equal to empty slots inside the kernel
+    and reports a bogus match — the documented contract is that callers
+    mask it (``relational``'s probe paths zero the count for sentinel
+    keys), so masked counts must agree with the oracle exactly."""
+    keys = jnp.asarray([5, 5, 9], jnp.int32)
+    rows = jnp.arange(3, dtype=jnp.int32)
+    tk, tv = ops.build_table(keys, rows, 16)
+    probes = jnp.asarray([-1, 5, 9, 12], jnp.int32)
+    count, slots = ops.hash_probe_multi(tk, tv, probes, 4, max_probes=16)
+    count = np.asarray(count)
+    assert count[0] >= 1                     # the raw kernel's bogus hit
+    masked = np.where(np.asarray(probes) == -1, 0, count)
+    np.testing.assert_array_equal(masked, [0, 2, 1, 0])
+    np.testing.assert_array_equal(np.sort(np.asarray(slots)[1, :2]), [0, 1])
+
+
+@seeded_given(max_examples=10, n=ints(1, 300),
+              ncols=sampled(2, 3), span_pow=sampled(4, 10, 16))
+def test_packed_key_property(n, ncols, span_pow):
+    """Composite-key packing (``relational.packed_key``): injective over
+    in-window tuples, nonnegative (never the sentinel), decodable back to
+    the original tuple, and exactly the sentinel for out-of-window rows."""
+    from repro.core import relational as rel
+
+    rng = np.random.default_rng(n * 100 + ncols + span_pow)
+    pack, prod = [], 1
+    for _ in range(ncols):
+        lo = int(rng.integers(-50, 50))
+        # keep the window product inside the int32 key lane — the same
+        # eligibility bound operators._derive_pack enforces
+        budget = (np.iinfo(np.int32).max) // prod
+        span = int(rng.integers(1, min(1 << span_pow, budget) + 1))
+        prod *= span
+        pack.append((lo, span))
+    cols_np = []
+    for lo, span in pack:
+        # mostly in-window values, with some out-of-window outliers
+        c = rng.integers(lo, lo + span, n)
+        out = rng.random(n) < 0.15
+        c = np.where(out, rng.integers(lo - 100, lo + span + 100, n), c)
+        cols_np.append(c.astype(np.int32))
+    in_window = np.ones(n, bool)
+    for c, (lo, span) in zip(cols_np, pack):
+        in_window &= (c >= lo) & (c < lo + span)
+
+    key = np.asarray(rel.packed_key(
+        [jnp.asarray(c) for c in cols_np], tuple(pack)))
+
+    # sentinel preservation: out-of-window rows pack to the empty sentinel,
+    # in-window rows never do (they are nonnegative by construction)
+    np.testing.assert_array_equal(key == -1, ~in_window)
+    assert (key[in_window] >= 0).all()
+
+    # round-trip: decode in-window keys back to the original tuples
+    dec = key[in_window].astype(np.int64)
+    decoded = []
+    for lo, span in reversed(pack):
+        decoded.append((dec % span + lo).astype(np.int32))
+        dec //= span
+    for c, d in zip(cols_np, reversed(decoded)):
+        np.testing.assert_array_equal(d, c[in_window])
+
+    # injectivity over in-window tuples
+    tuples = {tuple(c[i] for c in cols_np) for i in range(n) if in_window[i]}
+    assert len(np.unique(key[in_window])) == len(tuples)
+
+
+def test_packed_key_fits_int32_lane():
+    """Windows sized to the int32 budget pack without overflow: the
+    largest in-window tuple maps to span1*span2 - 1."""
+    from repro.core import relational as rel
+
+    span1, span2 = 1 << 16, (1 << 15) - 1    # product < 2^31 - 1
+    pack = ((0, span1), (0, span2))
+    c1 = jnp.asarray([0, span1 - 1], jnp.int32)
+    c2 = jnp.asarray([0, span2 - 1], jnp.int32)
+    key = np.asarray(rel.packed_key([c1, c2], pack))
+    assert key[0] == 0
+    assert key[1] == span1 * span2 - 1       # the largest in-window tuple
+    assert (key >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# integer / min-max accumulators
+# ---------------------------------------------------------------------------
+
+@seeded_given(max_examples=10, n=ints(1, 2000),
+              num_groups=sampled(8, 200, GROUP_BLOCK + 5))
+def test_segmented_int_sum_property(n, num_groups):
+    """Int accumulator vs the int32 segment_sum oracle, including values
+    past float32's exact-integer range (the reason the kernel exists)."""
+    import jax
+
+    rng = np.random.default_rng(n + num_groups)
+    gids = jnp.asarray(rng.integers(0, num_groups + 10, n), jnp.int32)
+    vals = jnp.asarray(rng.integers(-(1 << 24), 1 << 24, n), jnp.int32)
+    got = ops.segmented_int_sum(gids, vals, num_groups)
+    in_range = np.asarray(gids) < num_groups
+    want = jax.ops.segment_sum(vals[jnp.asarray(in_range)],
+                               gids[jnp.asarray(in_range)],
+                               num_segments=num_groups)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segmented_int_sum_exact_past_2_24():
+    gids = jnp.zeros((3,), jnp.int32)
+    vals = jnp.asarray([1 << 24, 1, 1], jnp.int32)
+    out = ops.segmented_int_sum(gids, vals, 2)
+    assert int(np.asarray(out)[0]) == (1 << 24) + 2
+
+
+@seeded_given(max_examples=10, n=ints(1, 2000),
+              num_groups=sampled(8, 200, GROUP_BLOCK + 5),
+              kind=sampled("min", "max"), floats=sampled(False, True))
+def test_segmented_minmax_property(n, num_groups, kind, floats):
+    """Min/max accumulators vs segment_min/max, floats and ints; empty
+    groups hold the reduction identity on both sides."""
+    import jax
+
+    rng = np.random.default_rng(n * 3 + num_groups)
+    gids = jnp.asarray(rng.integers(0, num_groups + 10, n), jnp.int32)
+    if floats:
+        vals = jnp.asarray(rng.normal(0, 100, n), jnp.float32)
+    else:
+        vals = jnp.asarray(rng.integers(-(1 << 30), 1 << 30, n), jnp.int32)
+    got = ops.segmented_minmax(gids, vals, num_groups, kind)
+    in_range = jnp.asarray(np.asarray(gids) < num_groups)
+    seg = jax.ops.segment_min if kind == "min" else jax.ops.segment_max
+    want = seg(vals[in_range], gids[in_range], num_segments=num_groups)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 @seeded_given(max_examples=6, n_keys=ints(1, 300), dup=sampled(False, True))
 def test_build_table_probe_invariant_property(n_keys, dup):
     """Any table the cooperative build produces must satisfy the linear
