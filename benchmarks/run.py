@@ -31,6 +31,7 @@ def main(argv=None) -> None:
         ("sql(frontend)", bench_sql.run),
         ("kernels(§3.2)", bench_kernels.run),
         ("concurrency(serving)", bench_concurrency.run),
+        ("concurrency_small(batching)", bench_concurrency.run_small_queries),
         ("barebones(Table1)", bench_barebones.run),
         ("exchange(Fig5,§3.4)", bench_exchange.run),
         ("exchange_planned(§3.3)", bench_exchange.run_planned),

@@ -258,6 +258,20 @@ class Driver:
         finally:
             self._close_spill()
 
+    def collect_batch(self, shapes, lanes=None) -> "list":
+        """Run a group of compatible queries (``core.batch.BatchShape``
+        sharing one interned program) as a single stacked execution;
+        returns one host-numpy result dict per member, in order.
+        ``lanes`` pins the member-lane count of the stacked program (the
+        scheduler passes its per-program cap so every launch reuses one
+        compiled executable); None sizes it to the group."""
+        from . import batch   # lazy: batch imports operators/fused
+        try:
+            with self._kernel_scope():
+                return batch.run_batch(self, shapes, lanes=lanes)
+        finally:
+            self._close_spill()
+
     def _close_spill(self) -> None:
         """Delete this query's spill files (counters survive in stats)."""
         if self.ctx.spill is not None:

@@ -173,3 +173,84 @@ def fused_morsel_program(table: DeviceTable, stages: Sequence[Stage],
     if probe is None:
         return out_table, None, None
     return out_table, outs[len(out_names) + 1], outs[len(out_names) + 2]
+
+
+def fused_batch_program(table: DeviceTable, params: Tuple,
+                        eval_fn, n_members: int,
+                        row_block: int = ROW_BLOCK,
+                        interpret: Optional[bool] = None):
+    """Inter-query batched variant of ``fused_morsel_program``: evaluate
+    ``n_members`` stacked queries' predicate lanes plus their shared
+    projections over one morsel in ONE Pallas dispatch.
+
+    ``eval_fn(table, params) -> (out_table, masks[n_members, capacity])``
+    is the batched stage walk (``core.batch.apply_batched_stages`` bound
+    to a program — injected as a callable so this module stays free of a
+    circular import on ``core.batch``). ``params`` is a tuple of
+    ``[n_members]`` scalar arrays, one per parameter slot; each lane's
+    scalars are broadcast whole into every row block.
+    """
+    if interpret is None:
+        interpret = not kernel_ops.on_tpu()
+    kernel_ops.mark_kernel("fused_batch")
+
+    cap = int(table.validity.shape[0])
+    names = tuple(table.column_names)
+    in_schema = dict(table.schema)
+    row_block = min(row_block, cap)
+    pad = (-cap) % row_block
+    in_arrays = [table.columns[n] for n in names] + [table.validity]
+    if pad:   # padded rows carry validity False → masked in every lane
+        in_arrays = [jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+                     for a in in_arrays]
+    n_pad = cap + pad
+
+    out_struct, mask_struct = jax.eval_shape(eval_fn, table, params)
+    del mask_struct
+    out_names = tuple(out_struct.column_names)
+    out_schema = dict(out_struct.schema)
+    n_in = len(names)
+    n_par = len(params)
+
+    def kernel(*refs):
+        col_refs, valid_ref = refs[:n_in], refs[n_in]
+        par_refs = refs[n_in + 1:n_in + 1 + n_par]
+        out_refs = refs[n_in + 1 + n_par:]
+        t = DeviceTable({n: r[...] for n, r in zip(names, col_refs)},
+                        valid_ref[...], dict(in_schema))
+        block, masks = eval_fn(t, tuple(r[...] for r in par_refs))
+        for k, n in enumerate(out_names):
+            out_refs[k][...] = block.columns[n]
+        out_refs[len(out_names)][...] = block.validity
+        out_refs[len(out_names) + 1][...] = masks
+
+    in_specs = [_block_spec(a.shape, row_block) for a in in_arrays]
+    # every parameter lane rides whole into each grid step
+    in_specs += [pl.BlockSpec((n_members,), lambda i: (0,))
+                 for _ in params]
+    operands = list(in_arrays) + list(params)
+
+    out_shapes, out_specs = [], []
+    for n in out_names:
+        s = out_struct.columns[n]
+        shape = (n_pad,) + s.shape[1:]
+        out_shapes.append(jax.ShapeDtypeStruct(shape, s.dtype))
+        out_specs.append(_block_spec(shape, row_block))
+    out_shapes.append(jax.ShapeDtypeStruct((n_pad,), jnp.bool_))
+    out_specs.append(pl.BlockSpec((row_block,), lambda i: (i,)))
+    out_shapes.append(jax.ShapeDtypeStruct((n_members, n_pad), jnp.bool_))
+    out_specs.append(
+        pl.BlockSpec((n_members, row_block), lambda i: (0, i)))
+
+    outs = pl.pallas_call(
+        kernel, grid=(n_pad // row_block,),
+        in_specs=in_specs, out_specs=out_specs, out_shape=out_shapes,
+        interpret=interpret,
+    )(*operands)
+
+    cols = [o[:cap] for o in outs[:len(out_names)]]
+    validity = outs[len(out_names)][:cap]
+    masks = outs[len(out_names) + 1][:, :cap]
+    out_table = DeviceTable(dict(zip(out_names, cols)), validity,
+                            out_schema)
+    return out_table, masks

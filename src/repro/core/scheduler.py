@@ -59,7 +59,9 @@ from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 from ..kernels import ops as kernel_ops
+from . import batch as _batch
 from . import plan as P
+from ..kernels import segmented_agg as _segagg
 from .driver import Driver, empty_executor_stats
 from .feedback import qerror
 from .optimizer import estimate_memory_breakdown, feedback_estimates, optimize
@@ -100,6 +102,17 @@ class SchedulerConfig:
     spill_host_budget: int = 1 << 31
     spill_disk_ceiling: int = 1 << 38
     spill_dir: Optional[str] = None
+    # inter-query batching (core.batch): when True, a worker that dequeues
+    # a batchable query (single-table filter/project/agg shape, W=1, no
+    # feedback store, no spill) waits up to batch_window_ms for compatible
+    # pending queries — same interned program, kernel backend, and catalog
+    # snapshot — and launches up to max_batch of them as ONE stacked
+    # execution, splitting results per handle on the way out. Strictly
+    # opt-in: when False no query grows batch state and the dispatch path
+    # is byte-for-byte the solo one.
+    batching: bool = False
+    batch_window_ms: float = 2.0
+    max_batch: int = 16
     # adaptive re-planning: a cached plan whose believed cardinalities
     # (static bounds, or the feedback observations it was planned from)
     # miss the fresh post-execution observations by more than this q-error
@@ -149,6 +162,12 @@ class QueryHandle:
         self._feedback = None
         self._plan_key: str = ""
         self._est_map: Dict[str, int] = {}
+        # inter-query batching: the extracted stacked-program membership
+        # (core.batch.BatchShape) and the compatibility key the worker
+        # groups on — (interned program identity, kernel backend); both
+        # None when batching is off or the plan is ineligible
+        self._batch_shape = None
+        self._batch_key: Optional[tuple] = None
         self.submitted_at = time.perf_counter()
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
@@ -296,6 +315,8 @@ class QueryScheduler:
         self.rejected = 0
         self.coalesced = 0
         self.spill_admitted = 0
+        self.batches = 0           # stacked launches (>= 2 members each)
+        self.batched_queries = 0   # queries served via a stacked launch
 
     # -- public API ---------------------------------------------------------
     def submit(self, plan: P.PlanNode, priority: int = 0,
@@ -303,7 +324,8 @@ class QueryScheduler:
                num_workers: Optional[int] = None,
                kernel_backend: Optional[str] = None,
                optimize: Optional[bool] = None,
-               feedback: Optional[object] = None) -> QueryHandle:
+               feedback: Optional[object] = None,
+               batching: Optional[bool] = None) -> QueryHandle:
         """Admit ``plan`` for execution; returns a ``QueryHandle``.
 
         Raises ``QueryRejected`` when the query could never fit the memory
@@ -317,6 +339,10 @@ class QueryScheduler:
         text prefix their plan/result cache keys with a hash of that text,
         worker-count and backend overrides are pinned on the handle (and
         keyed), and ``optimize=False`` runs the raw plan as-is.
+
+        ``batching=False`` opts this query out of inter-query batching
+        even when ``SchedulerConfig.batching`` is on (it has no effect
+        when the config flag is off — batching is strictly opt-in).
         """
         # the kernel backend is resolved ONCE, here at submit time (the
         # per-query override, else the session's setting, else the
@@ -425,6 +451,18 @@ class QueryScheduler:
                 self.config.memory_budget, self.config.spill_host_budget)
             with self._cond:
                 self.spill_admitted += 1
+        # inter-query batching: only when the config opts in (so the
+        # disabled path never even inspects the plan), the query didn't
+        # opt out, and the execution mode is the simple one a stacked
+        # launch can reproduce exactly — optimized W=1 plan, no feedback
+        # store (batched runs skip feedback harvesting), no spill
+        if (self.config.batching and batching is not False
+                and optimize is not False and fb is None
+                and handle.spill_plan is None and w == 1):
+            shape = _batch.extract_shape(optimized)
+            if shape is not None:
+                handle._batch_shape = shape
+                handle._batch_key = (shape.program, backend)
         with self._cond:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
@@ -486,6 +524,8 @@ class QueryScheduler:
                 "rejected": self.rejected,
                 "coalesced": self.coalesced,
                 "spill_admitted": self.spill_admitted,
+                "batches": self.batches,
+                "batched_queries": self.batched_queries,
                 "queued": len(self._pending),
                 "running": self._running,
                 "mem_in_use": self._mem_in_use,
@@ -581,15 +621,122 @@ class QueryScheduler:
                     handle = self._pick()
                 self._mem_in_use += handle.estimate
                 self._running += 1
+                members = [handle]
+                if self.config.batching and handle._batch_key is not None:
+                    members += self._claim_batch(handle)
             try:
-                self._execute(handle)
+                if len(members) > 1:
+                    self._execute_batch(members)
+                else:
+                    self._execute(handle)
             finally:
                 with self._cond:
-                    self._mem_in_use -= handle.estimate
-                    self._running -= 1
-                    if self._inflight.get(handle._result_key) is handle:
-                        del self._inflight[handle._result_key]
+                    for m in members:
+                        self._mem_in_use -= m.estimate
+                        self._running -= 1
+                        if self._inflight.get(m._result_key) is m:
+                            del self._inflight[m._result_key]
                     self._cond.notify_all()
+
+    def _claim_batch(self, leader: QueryHandle) -> List[QueryHandle]:
+        """Claim pending queries compatible with ``leader`` for one stacked
+        launch (held lock). Compatibility is the leader's batch key — the
+        interned program identity (which encodes table, columns, stage
+        shape, aggregation, and W=1) plus the kernel backend — and an
+        identical catalog-version snapshot, so a batch can never mix data
+        generations. The worker waits up to ``batch_window_ms`` for
+        stragglers; a keyed aggregation caps the batch at
+        ``kernels.segmented_agg.stacked_group_capacity`` so the stacked
+        segmented problem stays inside the kernel dispatch bound (a query
+        whose ``max_groups`` alone exceeds it degrades to solo execution).
+        Claimed members charge their full admission estimates — a
+        conservative over-charge, since the stacked run shares one scan."""
+        limit = self._batch_limit(leader._batch_shape.program)
+        members: List[QueryHandle] = []
+        deadline = time.perf_counter() + self.config.batch_window_ms / 1000.0
+        while True:
+            if len(members) + 1 < limit:
+                claimed = []
+                for entry in self._pending:
+                    h = entry[2]
+                    if (h._batch_key == leader._batch_key
+                            and h._versions == leader._versions):
+                        claimed.append(entry)
+                        if len(members) + 1 + len(claimed) >= limit:
+                            break
+                for entry in claimed:
+                    self._pending.remove(entry)
+                    h = entry[2]
+                    self._mem_in_use += h.estimate
+                    self._running += 1
+                    members.append(h)
+                if claimed:
+                    heapq.heapify(self._pending)
+            if len(members) + 1 >= limit:
+                break
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            # releases the lock: submits land while we wait, and the loop
+            # top sweeps them up (one final sweep after the window closes)
+            self._cond.wait(remaining)
+        return members
+
+    def _batch_limit(self, program) -> int:
+        """Per-program member cap for one stacked launch: ``max_batch``,
+        tightened for keyed aggregations so the stacked segmented problem
+        (``lanes * max_groups`` groups) stays inside the kernel dispatch
+        bound."""
+        limit = self.config.max_batch
+        if program.group_keys:
+            limit = min(limit,
+                        _segagg.stacked_group_capacity(program.max_groups))
+        return limit
+
+    def _execute_batch(self, members: List[QueryHandle]) -> None:
+        """Run a claimed group as ONE stacked execution, scattering the
+        per-member results (and per-query stats attribution) back onto
+        each handle. Any stacked failure falls back to per-member solo
+        execution — a query that would succeed alone must never receive
+        a batched error."""
+        t_launch = time.perf_counter()
+        for m in members:
+            m.started_at = t_launch
+        try:
+            leader = members[0]
+            sess = self.session
+            if leader.num_workers != sess.num_workers:
+                sess = dataclasses.replace(
+                    sess, num_workers=leader.num_workers)
+            ctx = sess.context()
+            ctx = dataclasses.replace(
+                ctx, kernel_backend=leader.kernel_backend, feedback=None)
+            if self.session.exchange is not None:
+                ctx = dataclasses.replace(
+                    ctx, exchange=self.session.exchange.clone())
+            driver = Driver(ctx)
+            # lane count pinned to the per-program cap, not the claimed
+            # size: every launch of this program reuses ONE compiled
+            # stacked executable no matter how the claim races land
+            lanes = _batch.padded_members(
+                self._batch_limit(members[0]._batch_shape.program))
+            results = driver.collect_batch(
+                [m._batch_shape for m in members], lanes=lanes)
+            stats = driver.executor_stats()
+            for m, result in zip(members, results):
+                es = dict(stats)
+                es["batch"] = {"size": len(members),
+                               "queue_delay_s": t_launch - m.submitted_at}
+                m.executor_stats = es
+                self.result_cache.put(m._result_key, m._versions, result)
+                m._complete(result=result)
+            with self._cond:
+                self.completed += len(members)
+                self.batches += 1
+                self.batched_queries += len(members)
+        except BaseException:  # noqa: BLE001 -- solo fallback delivers
+            for m in members:
+                self._execute(m)
 
     def _execute(self, handle: QueryHandle) -> None:
         """Run one admitted query on this worker thread's own Driver."""

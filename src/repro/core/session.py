@@ -216,6 +216,11 @@ class ExecutionOptions:
     # ephemeral ``core.feedback.FeedbackStore``, ``False`` disables the
     # session's store, or pass a ``FeedbackStore`` to share across queries
     feedback: Optional[object] = None
+    # inter-query batching opt-out for this query only: ``False`` keeps it
+    # out of stacked launches even when ``SchedulerConfig.batching`` is on
+    # (``True``/``None`` defer to the scheduler config — batching never
+    # activates from here alone)
+    batching: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -410,7 +415,8 @@ class Session:
             num_workers=opts.num_workers,
             kernel_backend=opts.kernel_backend,
             optimize=opts.optimize,
-            feedback=opts.feedback)
+            feedback=opts.feedback,
+            batching=opts.batching)
 
     def gather(self, *handles) -> list:
         """Wait for ``submit`` handles; results in argument order."""

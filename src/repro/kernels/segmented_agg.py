@@ -30,6 +30,34 @@ from jax.experimental import pallas as pl
 ROW_BLOCK = 1024
 GROUP_BLOCK = 1024
 
+# Inclusive group-count dispatch bound, kept in sync by hand with
+# ``core.relational.PALLAS_AGG_GROUP_LIMIT`` (the kernels package cannot
+# import core — core imports kernels). A regression test pins the two.
+STACKED_GROUP_LIMIT = 1 << 16
+
+
+def stacked_group_capacity(max_groups: int, limit: int = STACKED_GROUP_LIMIT
+                           ) -> int:
+    """How many queries can stack into one segmented-aggregation dispatch.
+
+    Inter-query batching (``core.batch``) fuses B compatible aggregations
+    by remapping ``group_id = query_id * max_groups + local_group``, so
+    the kernels see one segmented problem with ``B * max_groups`` groups.
+    The slab loop is correct for any count, but past ``limit`` (inclusive,
+    matching the solo dispatch bound) trace time beats the kernel's win
+    and the engine takes the jnp fallback — so the scheduler caps batches
+    at the largest power of two B with ``B * max_groups <= limit``
+    (power of two because member lanes pad up to one; a query whose solo
+    ``max_groups`` already exceeds ``limit`` gets capacity 1: solo
+    execution, never a wrong result).
+    """
+    if max_groups <= 0:
+        raise ValueError("max_groups must be positive")
+    cap = limit // max_groups
+    if cap <= 1:
+        return 1
+    return 1 << (cap.bit_length() - 1)
+
 
 def _kernel(gid_ref, val_ref, out_ref, *, group_block: int):
     rows = gid_ref.shape[0]

@@ -12,6 +12,12 @@ reduce-scatter / all-to-all / collective-permute ops). The post-SPMD module
 is the per-device program, so parsed quantities are already per-chip and
 ``roofline_terms`` is called with chips=1; MODEL_FLOPS comparisons divide
 the analytic global count by the chip count.
+
+(The old ``launch/perf.py`` hillclimb driver — a training-model variant
+sweep predating this repo's query-engine direction — was retired; its
+salvageable core, recording roofline terms against measured wall time for
+one compiled program, lives on as ``measure_program`` below, which
+``benchmarks/bench_kernels.py`` uses for per-kernel roofline fractions.)
 """
 
 from __future__ import annotations

@@ -428,3 +428,45 @@ def fuzz_queries(seed: int, n: int, catalog) -> List[str]:
                            f"WHERE {cond} GROUP BY {', '.join(keys)} "
                            f"ORDER BY {', '.join(keys)}")
     return out
+
+
+def fuzz_small_queries(seed: int, n: int, catalog) -> List[str]:
+    """``n`` deterministic *small-query* SQL texts: the serving-side
+    point-lookup / low-cardinality-group-by corpus the inter-query
+    batching scheduler exists for (``tests/test_batching.py``).
+
+    Every text is a single-table scan -> filter -> project/aggregate with
+    no ORDER BY — the plan family ``core.batch.extract_shape`` accepts —
+    and within each template only the comparison literals vary, so texts
+    from the same template are mutually compatible for stacked launches.
+    Texts that still fall outside the batchable surface (e.g. a date
+    filter the optimizer rewrites) simply run solo: the differential
+    contract is identical either way, a DuckDB diff is an engine bug."""
+    rng = random.Random(seed)
+    pk_tables = [t for t in sorted(_TABLES) if _TABLES[t]["pk"]]
+    dict_tables = [t for t in sorted(_TABLES) if _TABLES[t]["dicts"]]
+    out: List[str] = []
+    while len(out) < n:
+        mode = len(out) % 3
+        if mode == 0:            # point lookup on a primary key
+            t = rng.choice(pk_tables)
+            cols = _TABLES[t]
+            pk = cols["pk"]
+            extra = [c for c in cols["ints"] + cols["floats"] if c != pk]
+            sel = ", ".join([pk] + rng.sample(extra, min(2, len(extra))))
+            out.append(f"SELECT {sel} FROM {t} WHERE {pk} = "
+                       f"{_sample_literal(rng, catalog, t, pk)}")
+        elif mode == 1:          # filtered global aggregate
+            t = rng.choice(sorted(_TABLES))
+            cols = _TABLES[t]
+            out.append(f"SELECT {', '.join(_agg_items(rng, cols))} "
+                       f"FROM {t} WHERE {_filter(rng, catalog, t, cols)}")
+        else:                    # low-cardinality group-by (dict32 key)
+            t = rng.choice(dict_tables)
+            cols = _TABLES[t]
+            key = rng.choice(cols["dicts"])
+            sel = ", ".join([key] + _agg_items(rng, cols))
+            out.append(f"SELECT {sel} FROM {t} "
+                       f"WHERE {_filter(rng, catalog, t, cols)} "
+                       f"GROUP BY {key}")
+    return out
